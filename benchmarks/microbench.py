@@ -1,0 +1,67 @@
+"""Measured (wall-clock) microbenchmarks of the DASO step variants on an
+8-virtual-device (2 pods x 2 data x 2 model) CPU mesh, via subprocess so the
+main process keeps one device. Times are real; they validate the *relative*
+cost ordering (local < send < blocking), not TPU magnitudes."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_SCRIPT = """
+import time
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.daso import DasoConfig, daso_train_step, replicate_params
+from repro.optim.optimizers import sgd
+
+def loss_fn(params, batch):
+    h = jnp.tanh(batch["x"] @ params["w1"])
+    pred = h @ params["w2"]
+    return jnp.mean((pred - batch["y"]) ** 2), {}
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+R, per, d, h = 2, 32, 256, 512
+key = jax.random.PRNGKey(0)
+params0 = {"w1": jax.random.normal(key, (d, h)) * 0.05,
+           "w2": jax.random.normal(key, (h, d)) * 0.05}
+opt = sgd(momentum=0.9)
+cfg = DasoConfig(n_replicas=R, global_world=8)
+shp = NamedSharding(mesh, P("pod"))
+shb = NamedSharding(mesh, P("pod", "data"))
+p = jax.tree.map(lambda x: jax.device_put(x, shp), replicate_params(params0, R))
+o = jax.tree.map(lambda x: jax.device_put(x, shp),
+                 replicate_params(opt.init(params0), R))
+infl = jax.tree.map(lambda x: x, p)
+batch = {"x": jax.device_put(jax.random.normal(key, (R, per, d)), shb),
+         "y": jax.device_put(jax.random.normal(key, (R, per, d)), shb)}
+for mode in ("local", "send", "receive", "blocking"):
+    step = jax.jit(daso_train_step(loss_fn, opt, cfg, mode=mode, staleness=1))
+    out = step(p, o, infl, batch, 0.01)
+    jax.block_until_ready(out)
+    n = 30
+    t0 = time.perf_counter()
+    for _ in range(n):
+        p2, o2, infl2, m = step(p, o, infl, batch, 0.01)
+    jax.block_until_ready((p2, o2, infl2))
+    dt = (time.perf_counter() - t0) / n * 1e6
+    print(f"CSV daso_step_{mode} {dt:.1f} mesh=2x2x2")
+"""
+
+
+def emit_rows(emit):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(_SCRIPT)],
+                       capture_output=True, text=True, timeout=600, env=env)
+    if r.returncode != 0:
+        emit("daso_step_microbench_FAILED", 0.0, r.stderr[-200:])
+        return
+    for line in r.stdout.splitlines():
+        if line.startswith("CSV "):
+            _, name, us, derived = line.split(" ", 3)
+            emit(name, float(us), derived)

@@ -1,0 +1,92 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun/*.json.
+
+  python -m benchmarks.report dryrun    -> §Dry-run markdown table
+  python -m benchmarks.report daso      -> cross-pod traffic comparison
+  python -m benchmarks.report roofline  -> §Roofline markdown table
+"""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "dryrun")
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+ARCHS = ("musicgen-large", "falcon-mamba-7b", "qwen3-8b", "llama3.2-1b",
+         "moonshot-v1-16b-a3b", "recurrentgemma-9b", "granite-moe-3b-a800m",
+         "minitron-8b", "qwen2-vl-2b", "mixtral-8x22b")
+
+
+def _load(name):
+    p = os.path.join(DRYRUN, name + ".json")
+    if not os.path.exists(p):
+        return None
+    r = json.load(open(p))
+    return r if r.get("ok") else None
+
+
+def _gb(x):
+    return f"{x / 2**30:.2f}"
+
+
+def dryrun_table():
+    print("| arch | shape | mesh | variant | peak GiB/dev | HLO GFLOP/dev |"
+          " coll MB/dev | compile s |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for mesh in ("16x16", "2x16x16"):
+                r = _load(f"{arch}__{shape}__{mesh}")
+                if not r:
+                    print(f"| {arch} | {shape} | {mesh} | MISSING | | | | |")
+                    continue
+                print(f"| {arch} | {shape} | {mesh} | {r['variant']}"
+                      f"{' +fsdp' if r.get('fsdp') else ''} |"
+                      f" {_gb(r['memory']['peak_estimate_per_device'])} |"
+                      f" {r['cost']['flops'] / 1e9:.0f} |"
+                      f" {r['collectives']['_total_bytes'] / 1e6:.0f} |"
+                      f" {r['compile_s']:.0f} |")
+
+
+def daso_table():
+    print("| arch | sync cross-pod MB/step | daso cycle MB/step (B=4) |"
+          " reduction |")
+    print("|---|---|---|---|")
+    for arch in ARCHS:
+        sync = _load(f"{arch}__train_4k__2x16x16")
+        daso = _load(f"{arch}__train_4k__2x16x16__daso")
+        if not (sync and daso):
+            print(f"| {arch} | ? | ? | ? |")
+            continue
+
+        def pod_bytes(r):
+            return sum(v["bytes"] for k, v in r["collectives"].items()
+                       if isinstance(v, dict) and "pod" in k.split("@")[1])
+
+        s = pod_bytes(sync)
+        d = pod_bytes(daso) / 4.0  # amortize the 4-step cycle
+        red = 100 * (1 - d / s) if s else float("nan")
+        print(f"| {arch} | {s / 1e6:.1f} | {d / 1e6:.1f} | {red:.1f}% |")
+
+
+def roofline_table():
+    from benchmarks.roofline import build_table
+    rows = build_table()
+    print("| arch | shape | compute ms | memory ms | collective ms |"
+          " dominant | useful/HLO flops | fits 16G | extrap |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} |"
+              f" {r['compute_s'] * 1e3:.2f} | {r['memory_s'] * 1e3:.2f} |"
+              f" {r['collective_s'] * 1e3:.3f} | {r['dominant']} |"
+              f" {r['useful_flops_ratio']:.2f} |"
+              f" {'Y' if r['fits_hbm'] else 'N'} |"
+              f" {'Y' if r['extrapolated'] else 'N'} |")
+
+
+if __name__ == "__main__":
+    {"dryrun": dryrun_table, "daso": daso_table,
+     "roofline": roofline_table}[sys.argv[1]]()

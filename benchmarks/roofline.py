@@ -1,0 +1,174 @@
+"""Roofline analysis (deliverable g).
+
+Sources, per (arch x input-shape) on the single-pod production mesh:
+  * full-program dry-run JSON  -> memory fit, collective schedule (scan-bound)
+  * unrolled 1-group / 2-group dry-run JSONs -> per-layer-group FLOPs/bytes/
+    collective bytes by 2-point extrapolation (XLA cost_analysis counts scan
+    bodies once — see EXPERIMENTS.md methodology), scaled to the full depth.
+
+Terms (TPU v5e):
+  compute_s    = HLO_FLOPs_per_device / 197e12
+  memory_s     = HLO_bytes_per_device / 819e9
+  collective_s = sum_axis bytes_axis * ring_factor / link_bw
+                 (ICI 50 GB/s for data/model axes, DCN 25 GB/s for pod)
+MODEL_FLOPS = 6*N_active*T (train) or 2*N_active*T (inference) per device.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+DCN = 25e9
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+SHAPES = {"train_4k": (4096, 256, "train"),
+          "prefill_32k": (32768, 32, "prefill"),
+          "decode_32k": (32768, 128, "decode"),
+          "long_500k": (524288, 1, "decode")}
+
+
+def _load(arch, shape, mesh="16x16", suffix=""):
+    p = os.path.join(DRYRUN_DIR, f"{arch}__{shape}__{mesh}{suffix}.json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        rec = json.load(f)
+    return rec if rec.get("ok") else None
+
+
+def collective_seconds(coll: Dict, n_devices=256) -> Dict[str, float]:
+    """Split collective result-bytes into ICI vs DCN seconds with ring
+    factors (all-reduce moves ~2x its buffer per device; gather/scatter ~1x)."""
+    out = {"ici_bytes": 0.0, "dcn_bytes": 0.0}
+    for key, v in coll.items():
+        if key.startswith("_") or not isinstance(v, dict):
+            continue
+        kind, axis = key.split("@")
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        link = "dcn_bytes" if "pod" in axis else "ici_bytes"
+        out[link] += factor * v["bytes"]
+    out["ici_s"] = out["ici_bytes"] / ICI
+    out["dcn_s"] = out["dcn_bytes"] / DCN
+    return out
+
+
+def active_param_count(cfg) -> float:
+    """Parameters touched per token (MoE: top_k/n_experts of expert weights)."""
+    import jax
+    from repro.launch.specs import params_struct
+    params = params_struct(cfg)
+    total = active = 0.0
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in flat:
+        keys = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if "we1" in keys or "we2" in keys or "we3" in keys:
+            active += n * cfg.moe.top_k / cfg.moe.n_experts
+        elif "embed/tok" in keys or "unembed" in keys:
+            active += 0  # lookup/head counted separately; exclude embeds
+        else:
+            active += n
+    return active
+
+
+def analyze_pair(arch: str, shape: str) -> Optional[Dict]:
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    full = _load(arch, shape)
+    u1 = _load(arch, shape, suffix="__u1")
+    u2 = _load(arch, shape, suffix="__u2")
+    if full is None:
+        return None
+    plen = len(cfg.layer_pattern)
+    n_groups = cfg.n_layers / plen
+
+    rec = {"arch": arch, "shape": shape,
+           "fits_hbm": full["memory"]["peak_estimate_per_device"] < 16e9,
+           "peak_bytes": full["memory"]["peak_estimate_per_device"],
+           "param_bytes": full["param_bytes"]}
+
+    if u1 and u2:
+        def extrap2(c1, c2):
+            per = max(c2 - c1, 0.0)   # tiny decode lowerings can be noisy
+            return max(max(c1 - per, 0.0) + per * n_groups, c1)
+
+        def extrap(field):
+            return extrap2(u1["cost"][field], u2["cost"][field])
+
+        flops = extrap("flops")
+        bytes_ = extrap("bytes_accessed")
+        cs1 = collective_seconds(u1["collectives"])
+        cs2 = collective_seconds(u2["collectives"])
+        ici_b = extrap2(cs1["ici_bytes"], cs2["ici_bytes"])
+        dcn_b = extrap2(cs1["dcn_bytes"], cs2["dcn_bytes"])
+        extrapolated = True
+    else:  # fall back to the scan-bound full program (underestimates)
+        flops = full["cost"]["flops"]
+        bytes_ = full["cost"]["bytes_accessed"]
+        cs = collective_seconds(full["collectives"])
+        ici_b, dcn_b = cs["ici_bytes"], cs["dcn_bytes"]
+        extrapolated = False
+
+    compute_s = flops / PEAK
+    memory_s = bytes_ / HBM
+    coll_s = ici_b / ICI + dcn_b / DCN
+    seq, gb, kind = SHAPES[shape]
+    n_active = active_param_count(cfg)
+    tokens = (seq * gb) if kind != "decode" else gb
+    per_dev_tokens = tokens / 256
+    model_flops = (6.0 if kind == "train" else 2.0) * n_active * \
+        per_dev_tokens * 256 / 256  # per-device share of global useful flops
+    dominant = max((compute_s, "compute"), (memory_s, "memory"),
+                   (coll_s, "collective"))[1]
+    rec.update({
+        "flops_per_dev": flops, "bytes_per_dev": bytes_,
+        "ici_bytes": ici_b, "dcn_bytes": dcn_b,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "dominant": dominant,
+        "model_flops_per_dev": model_flops,
+        "useful_flops_ratio": (model_flops / flops) if flops else 0.0,
+        "extrapolated": extrapolated,
+        "step_s_bound": max(compute_s, memory_s, coll_s),
+    })
+    return rec
+
+
+def build_table() -> list:
+    from repro.configs import ARCH_IDS
+    rows = []
+    for arch in [a for a in ARCH_IDS if a != "resnet50"]:
+        for shape in SHAPES:
+            r = analyze_pair(arch, shape)
+            if r:
+                rows.append(r)
+    return rows
+
+
+def write_report(rows, path):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+def emit_rows(emit):
+    rows = build_table()
+    for r in rows:
+        emit(f"roofline_{r['arch']}_{r['shape']}",
+             r["step_s_bound"] * 1e6,
+             f"dom={r['dominant']};comp={r['compute_s'] * 1e3:.2f}ms;"
+             f"mem={r['memory_s'] * 1e3:.2f}ms;"
+             f"coll={r['collective_s'] * 1e3:.2f}ms;"
+             f"useful={r['useful_flops_ratio']:.2f};"
+             f"fits={r['fits_hbm']}")
+    write_report(rows, os.path.join(DRYRUN_DIR, "..", "roofline.json"))
+    return rows

@@ -1,0 +1,77 @@
+"""Checkpointing: flat-key npz tensors + JSON manifest (structure, step,
+dtypes). Sharding-aware: arrays are gathered to host on save and placed back
+with the provided shardings on restore."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]):
+    root: Dict = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def fix(node):
+        if not isinstance(node, dict):
+            return node
+        if node and all(k.startswith("#") for k in node):
+            return [fix(node[f"#{i}"]) for i in range(len(node))]
+        return {k: fix(v) for k, v in node.items()}
+
+    return fix(root)
+
+
+def save_checkpoint(path: str, tree, *, step: int = 0,
+                    extra: Optional[dict] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    arrays, manifest = {}, {"step": step, "dtypes": {}, "extra": extra or {}}
+    for k, v in flat.items():
+        arr = np.asarray(jax.device_get(v))
+        manifest["dtypes"][k] = str(v.dtype)
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.astype(np.float32)  # npz-safe container
+        arrays[k] = arr
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_checkpoint(path: str, *, shardings=None):
+    """Returns (tree, manifest). shardings: optional matching pytree of
+    NamedShardings for distributed placement."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat = {}
+    for k in data.files:
+        arr = data[k]
+        dt = manifest["dtypes"][k]
+        flat[k] = jnp.asarray(arr, dtype=dt)
+    tree = _unflatten(flat)
+    if shardings is not None:
+        tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree, manifest

@@ -1,0 +1,10 @@
+from repro.configs.base import (  # noqa: F401
+    ARCH_IDS,
+    ArchConfig,
+    MoEConfig,
+    RGLRUConfig,
+    SSMConfig,
+    get_config,
+    get_reduced,
+    reduce_config,
+)

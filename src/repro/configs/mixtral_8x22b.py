@@ -1,0 +1,27 @@
+"""Mixtral-8x22B: 8-expert top-2 MoE with sliding-window attention
+[arXiv:2401.04088].
+
+56L d_model=6144 48H (GQA kv=8, head_dim=128) expert d_ff=16384 vocab=32768,
+SWA window 4096 on every layer (per the assignment bracket). SWA makes the
+arch sub-quadratic -> long_500k runs natively.
+8 experts % 16 != 0 -> tensor-parallel expert sharding.
+"""
+from repro.configs.base import ArchConfig, ATTN_SWA, MoEConfig
+
+CONFIG = ArchConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    n_layers=56,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=0,
+    vocab_size=32768,
+    layer_pattern=(ATTN_SWA,),
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff=16384, n_shared_experts=0,
+                  capacity_factor=1.25, sharding="tensor"),
+    sliding_window=4096,
+    rope_theta=1_000_000.0,
+    source="[arXiv:2401.04088]",
+)

@@ -1,0 +1,27 @@
+"""MusicGen-large decoder backbone over EnCodec tokens [arXiv:2306.05284].
+
+48L d_model=2048 32H (kv=32, i.e. MHA) d_ff=8192 vocab=2048. The text/melody
+conditioning frontend is stubbed: input_specs() provides a precomputed
+conditioning-embedding prefix of shape (B, prefix, d_model) which the backbone
+consumes via the embedding-splice path. long_500k runs with a sliding-window
+variant (the arch itself is full-attention).
+"""
+from repro.configs.base import ArchConfig, ATTN
+
+CONFIG = ArchConfig(
+    name="musicgen-large",
+    family="audio",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=2048,
+    layer_pattern=(ATTN,),
+    rope_type="none",  # musicgen uses learned/sinusoidal positions; we use rope_type none + sinusoidal
+    tie_embeddings=False,
+    long_context_window=8192,
+    prefix_embed_len=64,
+    source="[arXiv:2306.05284]",
+)

@@ -1,0 +1,14 @@
+# DASO — the paper's primary contribution: hierarchical, asynchronous,
+# selective data-parallel optimization (Coquelin et al. 2021).
+from repro.core.daso import (  # noqa: F401
+    DasoConfig,
+    blocking_sync,
+    daso_train_step,
+    dereplicate_params,
+    global_receive,
+    global_send,
+    local_step,
+    replicate_params,
+)
+from repro.core.schedule import DasoController, Mode  # noqa: F401
+from repro.core.compression import compress_bf16_roundtrip  # noqa: F401

@@ -1,0 +1,240 @@
+"""DASO core: hierarchical + asynchronous + selective optimization in SPMD JAX.
+
+Layout-agnostic formulation. Every parameter leaf carries a leading *replica*
+axis of size R — one entry per paper "node" (TPU: one per pod; simulator: one
+per virtual node). The per-replica training step runs under vmap; on a mesh
+the replica axis is sharded over "pod", so:
+
+  * local sync  — the loss mean over the per-replica batch makes XLA emit a
+    gradient all-reduce over the intra-pod "data" axis only (fast ICI):
+    exactly the paper's node-local NCCL gradient averaging, every step.
+  * global sync — any mean over the leading replica axis lowers to a cross-pod
+    (DCN) all-reduce: exactly the paper's MPI group exchange. It appears in
+    the HLO only in the step variants that perform it.
+
+Step variants (selected by the host-side DasoController, mirroring the MPI
+process flow of paper Fig. 5; static per-variant compilation keeps each HLO's
+collective set exact for the roofline audit):
+
+  local     forward/backward + local optimizer step only
+  send      local + snapshot params and start the global exchange:
+            inflight <- mean_replicas(params)
+  receive   local + merge the (now stale, S steps old) exchange result via
+            paper Eq. (1):  x = (2S * x_local + P * x_stale_mean) / (2S + P)
+  blocking  local + synchronous global parameter average with bf16
+            transfer compression (warm-up / cool-down phases)
+  hard_avg  local + naive parameter overwrite (local-SGD ablation)
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import Optimizer
+
+
+@dataclass(frozen=True)
+class DasoConfig:
+    n_replicas: int              # R: paper "nodes" (pods / virtual nodes)
+    global_world: int            # P in Eq. (1): GPUs in the global network
+    b_max: int = 4               # paper: max batches between global syncs
+    warmup_steps: int = 0
+    cooldown_steps: int = 0
+    total_steps: int = 0
+    compress_blocking: bool = True
+    # BEYOND-PAPER: the paper skips 16-bit packaging for non-blocking sends
+    # (MPI packaging delays the Isend). In SPMD/XLA the cast fuses into the
+    # collective with no launch delay, so compressing the cycling-phase
+    # exchange halves DCN bytes for free. Default False = paper-faithful.
+    compress_nonblocking: bool = False
+    plateau_patience: int = 5
+    plateau_threshold: float = 1e-3
+
+
+# -- replica-axis helpers ----------------------------------------------------
+
+def replicate_params(params, n_replicas: int):
+    return jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (n_replicas,) + p.shape), params)
+
+
+def dereplicate_params(params):
+    return jax.tree.map(lambda p: p[0], params)
+
+
+def replica_mean(tree, wire_dtype=None):
+    """Mean over the leading replica axis, broadcast back. On the production
+    mesh this lowers to the cross-pod (DCN) all-reduce; `wire_dtype`
+    controls the dtype that crosses the wire (None = the leaf's own dtype,
+    jnp.bfloat16 = the paper's 16-bit transfer compression)."""
+    def leaf(x):
+        wd = jnp.dtype(wire_dtype or x.dtype)
+        # Pin the reduction computation dtype with lax.reduce: both jnp.mean
+        # and jnp.sum(dtype=...) silently upcast bf16 accumulation to f32,
+        # which puts f32 on the cross-pod wire (verified in HLO).
+        w = x.astype(wd)
+        m = jax.lax.reduce(w, jnp.zeros((), wd), jax.lax.add, (0,))
+        m = (m * jnp.asarray(1.0 / x.shape[0], wd))[None]
+        return jnp.broadcast_to(m, x.shape).astype(x.dtype)
+    return jax.tree.map(leaf, tree)
+
+
+def replica_divergence(params) -> jnp.ndarray:
+    """Max abs deviation of any replica from the replica mean (diagnostic)."""
+    def leaf(x):
+        x = x.astype(jnp.float32)
+        return jnp.max(jnp.abs(x - x.mean(axis=0, keepdims=True)))
+    return functools.reduce(jnp.maximum,
+                            [leaf(x) for x in jax.tree.leaves(params)])
+
+
+# -- DASO primitive operations ------------------------------------------------
+
+def global_send(params, *, compress: bool = False):
+    """Snapshot + start global exchange: returns the in-flight buffer
+    (replica mean of current params, one copy per replica). compress=True
+    puts bf16 on the wire (beyond-paper for the non-blocking path, see
+    DasoConfig)."""
+    return replica_mean(params,
+                        wire_dtype=jnp.bfloat16 if compress else None)
+
+
+def global_receive(params, inflight, *, staleness: int, global_world: int):
+    """Paper Eq. (1): weighted merge of stale global average with current
+    local params. staleness S = batches waited; global_world P."""
+    s2 = jnp.asarray(2.0 * staleness, jnp.float32)
+    p_ = jnp.asarray(float(global_world), jnp.float32)
+    denom = s2 + p_
+
+    def leaf(x_local, x_stale):
+        merged = (s2 * x_local.astype(jnp.float32)
+                  + p_ * x_stale.astype(jnp.float32)) / denom
+        return merged.astype(x_local.dtype)
+
+    return jax.tree.map(leaf, params, inflight)
+
+
+def blocking_sync(params, *, compress: bool = True):
+    """Synchronous global average (warm-up / cool-down), with the paper's
+    16-bit transfer compression."""
+    return replica_mean(params,
+                        wire_dtype=jnp.bfloat16 if compress else None)
+
+
+# -- assembled train step ------------------------------------------------------
+
+def microbatched_value_and_grad(loss_fn: Callable, n_micro: int):
+    """Gradient accumulation: split the batch along its leading dim into
+    n_micro chunks and lax.scan the fwd+bwd over them. Cuts the live
+    activation/residual footprint ~n_micro-fold (beyond-paper memory
+    optimization, EXPERIMENTS.md §Perf)."""
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    if n_micro <= 1:
+        return grad_fn
+
+    def fn(params, batch):
+        micro = jax.tree.map(
+            lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                + x.shape[1:]), batch)
+
+        def body(carry, mb):
+            loss_acc, aux_acc, g_acc = carry
+            (loss, aux), g = grad_fn(params, mb)
+            g_acc = jax.tree.map(jnp.add, g_acc, g)
+            aux_acc = jax.tree.map(jnp.add, aux_acc, aux)
+            return (loss_acc + loss, aux_acc, g_acc), None
+
+        (loss0, aux0), g0 = jax.eval_shape(grad_fn, params,
+                                           jax.tree.map(lambda x: x[0],
+                                                        micro))
+        zeros = lambda t: jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), t)
+        (loss, aux, grads), _ = jax.lax.scan(
+            body, (jnp.zeros(loss0.shape, loss0.dtype), zeros(aux0),
+                   zeros(g0)), micro)
+        inv = 1.0 / n_micro
+        scale = lambda t: jax.tree.map(
+            lambda x: (x * inv).astype(x.dtype) if jnp.issubdtype(
+                x.dtype, jnp.floating) else x, t)
+        return (loss * inv, scale(aux)), scale(grads)
+
+    return fn
+
+
+def local_step(loss_fn: Callable, optimizer: Optimizer,
+               spmd_axis_name: Optional[str] = None, n_micro: int = 1):
+    """Returns step(params_R, opt_R, batch_R, lr) -> (params, opt, metrics).
+    loss_fn(params, batch) -> (loss, aux). vmapped over the replica axis.
+
+    On a mesh, pass spmd_axis_name="pod": sharding constraints inside the
+    model then keep the replica dim pod-sharded (plain vmap would mark it
+    replicated and force cross-pod all-gathers of every constrained
+    activation — verified in the HLO audit, see EXPERIMENTS.md)."""
+    grad_fn = microbatched_value_and_grad(loss_fn, n_micro)
+
+    def one(params, opt_state, batch, lr):
+        (loss, aux), grads = grad_fn(params, batch)
+        new_params, new_opt = optimizer.update(grads, opt_state, params, lr)
+        return new_params, new_opt, loss, aux
+
+    return jax.vmap(one, in_axes=(0, 0, 0, None),
+                    spmd_axis_name=spmd_axis_name)
+
+
+MODES = ("local", "send", "receive", "send_receive", "blocking", "hard_avg")
+
+
+def daso_train_step(loss_fn: Callable, optimizer: Optimizer, cfg: DasoConfig,
+                    *, mode: str, staleness: int = 1,
+                    spmd_axis_name: Optional[str] = None, n_micro: int = 1):
+    """Build one statically-specialized DASO step function.
+
+    step(params_R, opt_R, inflight, batch_R, lr)
+        -> (params_R, opt_R, inflight, metrics)
+    """
+    assert mode in MODES, mode
+    lstep = local_step(loss_fn, optimizer, spmd_axis_name=spmd_axis_name,
+                       n_micro=n_micro)
+
+    def step(params, opt_state, inflight, batch, lr):
+        if mode in ("receive", "send_receive"):
+            params = global_receive(params, inflight,
+                                    staleness=staleness,
+                                    global_world=cfg.global_world)
+        params, opt_state, loss_r, aux_r = lstep(params, opt_state, batch, lr)
+        if mode in ("send", "send_receive"):
+            inflight = global_send(params,
+                                   compress=cfg.compress_nonblocking)
+        elif mode == "blocking":
+            params = blocking_sync(params, compress=cfg.compress_blocking)
+        elif mode == "hard_avg":
+            params = replica_mean(params)
+        metrics = {"loss": jnp.mean(loss_r), "loss_per_replica": loss_r}
+        for k, v in aux_r.items():
+            if isinstance(v, jnp.ndarray) and v.ndim <= 1:
+                metrics[k] = jnp.mean(v)
+        return params, opt_state, inflight, metrics
+
+    return step
+
+
+def sync_train_step(loss_fn: Callable, optimizer: Optimizer,
+                    n_micro: int = 1):
+    """Horovod-analog baseline: flat data parallelism, no replica axis; XLA
+    emits the global gradient all-reduce over ("pod","data") every step."""
+    grad_fn = microbatched_value_and_grad(loss_fn, n_micro)
+
+    def step(params, opt_state, batch, lr):
+        (loss, aux), grads = grad_fn(params, batch)
+        new_params, new_opt = optimizer.update(grads, opt_state, params, lr)
+        metrics = {"loss": loss}
+        for k, v in aux.items():
+            if isinstance(v, jnp.ndarray) and v.ndim == 0:
+                metrics[k] = v
+        return new_params, new_opt, metrics
+
+    return step

@@ -1,0 +1,129 @@
+"""Host-side DASO controller: phases (warm-up / cycling / cool-down) and the
+selective B/W schedule (paper §3).
+
+Cycling rules from the paper:
+  * B (batches between global syncs) starts at b_max (paper uses 4);
+  * W (batches to wait for the exchange) starts at max(1, B/4) — "an initial
+    value of B/4 was found empirically to perform best";
+  * on every training-loss plateau, B and W are halved (min 1);
+  * when B == W == 1 and the loss plateaus again, both reset to their initial
+    values and the process repeats until cool-down.
+
+The controller is pure host logic: given the step index it returns which
+statically-compiled step variant to run (mirroring the MPI-side decisions an
+HeAT/DASO rank makes), and consumes windowed loss averages for plateau
+detection (paper: "training loss stable for N epochs").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from repro.core.daso import DasoConfig
+
+
+class Mode:
+    LOCAL = "local"
+    SEND = "send"
+    RECEIVE = "receive"
+    SEND_RECEIVE = "send_receive"
+    BLOCKING = "blocking"
+    HARD_AVG = "hard_avg"
+
+
+@dataclass
+class DasoController:
+    cfg: DasoConfig
+    # plateau detection over windowed mean losses
+    loss_window: int = 50
+    _b: int = field(init=False)
+    _w: int = field(init=False)
+    _last_send: int = field(init=False, default=-(10 ** 9))
+    _inflight_since: Optional[int] = field(init=False, default=None)
+    _recv_staleness: int = field(init=False, default=1)
+    _best: float = field(init=False, default=float("inf"))
+    _since_improve: int = field(init=False, default=0)
+    _win_acc: List[float] = field(init=False, default_factory=list)
+    history: List[Tuple[int, str, int, int]] = field(init=False,
+                                                     default_factory=list)
+
+    def __post_init__(self):
+        self._b = max(1, self.cfg.b_max)
+        self._w = max(1, self._b // 4)
+
+    # -- phase logic -------------------------------------------------------
+    def phase(self, step: int) -> str:
+        if step < self.cfg.warmup_steps:
+            return "warmup"
+        if (self.cfg.total_steps and self.cfg.cooldown_steps
+                and step >= self.cfg.total_steps - self.cfg.cooldown_steps):
+            return "cooldown"
+        return "cycling"
+
+    @property
+    def b(self) -> int:
+        return self._b
+
+    @property
+    def w(self) -> int:
+        return self._w
+
+    def mode_for_step(self, step: int) -> Tuple[str, int]:
+        """Returns (mode, staleness_S). Call exactly once per step, in order."""
+        ph = self.phase(step)
+        if ph in ("warmup", "cooldown"):
+            # a blocking step completes any dangling exchange trivially
+            self._inflight_since = None
+            mode, stale = Mode.BLOCKING, 1
+        else:
+            recv = (self._inflight_since is not None
+                    and step - self._inflight_since >= self._w)
+            send = step - self._last_send >= self._b
+            if recv:
+                # S = batches actually waited since the send
+                stale = step - self._inflight_since
+                self._inflight_since = None
+            else:
+                stale = 1
+            if send and self._inflight_since is not None:
+                send = False  # previous exchange still in flight: skip
+            if send:
+                self._last_send = step
+                self._inflight_since = step
+            mode = {(False, False): Mode.LOCAL,
+                    (True, False): Mode.SEND,
+                    (False, True): Mode.RECEIVE,
+                    (True, True): Mode.SEND_RECEIVE}[(send, recv)]
+        self.history.append((step, mode, self._b, self._w))
+        return mode, stale
+
+    # -- plateau-driven B/W schedule ----------------------------------------
+    def observe_loss(self, loss: float) -> None:
+        self._win_acc.append(float(loss))
+        if len(self._win_acc) < self.loss_window:
+            return
+        mean = sum(self._win_acc) / len(self._win_acc)
+        self._win_acc.clear()
+        if mean < self._best * (1.0 - self.cfg.plateau_threshold):
+            self._best = mean
+            self._since_improve = 0
+            return
+        self._since_improve += 1
+        if self._since_improve >= self.cfg.plateau_patience:
+            self._since_improve = 0
+            if self._b == 1 and self._w == 1:
+                self._b = max(1, self.cfg.b_max)          # paper: reset
+                self._w = max(1, self._b // 4)
+            else:
+                self._b = max(1, self._b // 2)             # paper: halve
+                self._w = max(1, self._w // 2)
+
+    # -- audit -------------------------------------------------------------
+    def global_sync_fraction(self) -> float:
+        """Fraction of steps that touched the cross-pod network (for the
+        traffic-reduction claim)."""
+        if not self.history:
+            return 0.0
+        touched = sum(1 for (_, m, _, _) in self.history
+                      if m in (Mode.SEND, Mode.SEND_RECEIVE, Mode.BLOCKING))
+        return touched / len(self.history)

@@ -1,0 +1,6 @@
+from repro.data.synthetic import (  # noqa: F401
+    SyntheticImages,
+    SyntheticLM,
+    make_noniid_class_partition,
+)
+from repro.data.loader import ShardedLoader  # noqa: F401

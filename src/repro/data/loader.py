@@ -1,0 +1,38 @@
+"""Sharded data loader: places host batches onto the mesh with the right
+sharding (batch over ("pod","data")), optionally adding the DASO replica
+leading dim. Single-host in this container; the device_put path is the same
+one a multi-host launcher would use per-process."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import MeshPolicy
+
+
+class ShardedLoader:
+    def __init__(self, source, batch_size: int, policy: Optional[MeshPolicy]
+                 = None, n_replicas: int = 1):
+        """source: object with .batch(batch_size, step) -> dict of arrays.
+        n_replicas > 1 reshapes batch to (R, B/R, ...) for DASO."""
+        self.source = source
+        self.batch_size = batch_size
+        self.policy = policy
+        self.n_replicas = n_replicas
+
+    def __call__(self, step: int):
+        batch = self.source.batch(self.batch_size, step)
+        if self.n_replicas > 1:
+            R = self.n_replicas
+            batch = {k: v.reshape((R, v.shape[0] // R) + v.shape[1:])
+                     for k, v in batch.items()}
+        if self.policy is not None:
+            def put(x):
+                spec = (("replica", "batch") if self.n_replicas > 1
+                        else ("batch",))
+                spec = spec + (None,) * (x.ndim - len(spec))
+                return jax.device_put(x, self.policy.sharding(*spec))
+            batch = {k: put(v) for k, v in batch.items()}
+        return batch

@@ -1,0 +1,42 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels run with interpret=True (the kernel body
+executes in Python op-by-op — same math, same blocking); on TPU set
+interpret=False (default resolves via repro.kernels.ops.INTERPRET)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.rglru_scan import rglru_scan as _rglru
+from repro.kernels.ssm_scan import ssm_scan as _ssm
+
+# CPU container default; flipped to False on real TPU deployments.
+INTERPRET = jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    interpret = INTERPRET if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, window=window, block_q=block_q,
+                  block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def ssm_scan(x, dt, A, Bm, Cm, h0, *, block_d: int = 512,
+             interpret: bool | None = None):
+    interpret = INTERPRET if interpret is None else interpret
+    return _ssm(x, dt, A, Bm, Cm, h0, block_d=block_d, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def rglru_scan(a, gx, h0, *, block_w: int = 512,
+               interpret: bool | None = None):
+    interpret = INTERPRET if interpret is None else interpret
+    return _rglru(a, gx, h0, block_w=block_w, interpret=interpret)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels. Deliberately naive (materialize
+full score matrices / state histories) — correctness reference only."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q (B,Hq,Sq,D); k,v (B,Hk,Sk,D); GQA by head grouping. fp32 softmax."""
+    B, Hq, Sq, D = q.shape
+    Hk, Sk = k.shape[1], k.shape[2]
+    G = Hq // Hk
+    qg = q.reshape(B, Hk, G, Sq, D)
+    s = jnp.einsum("bkgqd,bkld->bkgql", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    row = jnp.arange(Sq)[:, None] + (Sk - Sq)  # align ends (q suffix of k)
+    col = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= col <= row
+    if window:
+        mask &= col > row - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgql,bkld->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, Sq, D).astype(q.dtype)
+
+
+def ssm_scan_ref(x, dt, A, Bm, Cm, h0):
+    """Mamba selective scan, sequential reference.
+    x, dt (B,S,Di); A (Di,N); Bm, Cm (B,S,N); h0 (B,Di,N).
+    Returns (y (B,S,Di) f32, h_final)."""
+    B, S, Di = x.shape
+
+    def step(h, t):
+        da = jnp.exp(dt[:, t, :, None] * A)
+        db = ((dt[:, t] * x[:, t].astype(jnp.float32))[..., None]
+              * Bm[:, t].astype(jnp.float32)[:, None, :])
+        h = da * h + db
+        y = jnp.einsum("bdn,bn->bd", h, Cm[:, t].astype(jnp.float32))
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return ys.swapaxes(0, 1), h
+
+
+def rglru_scan_ref(a, gx, h0):
+    """Diagonal recurrence h_t = a_t * h_{t-1} + gx_t.
+    a, gx (B,S,W) f32; h0 (B,W). Returns (hs (B,S,W), h_final)."""
+    def step(h, t):
+        h = a[:, t] * h + gx[:, t]
+        return h, h
+
+    h, hs = jax.lax.scan(step, h0, jnp.arange(a.shape[1]))
+    return hs.swapaxes(0, 1), h

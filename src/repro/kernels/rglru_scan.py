@@ -1,0 +1,53 @@
+"""RG-LRU linear-recurrence Pallas kernel (RecurrentGemma / Griffin).
+
+The gate projections (matmuls) run outside on the MXU; this kernel is the
+memory-bound diagonal recurrence h_t = a_t * h_{t-1} + gx_t over (B, S, W)
+with a (block_w,) state vector resident in VMEM per grid cell.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rglru_kernel(a_ref, gx_ref, h0_ref, hs_ref, hout_ref, *, seq_len):
+    def body(t, h):
+        h = a_ref[t, :].astype(jnp.float32) * h + gx_ref[t, :].astype(
+            jnp.float32)
+        hs_ref[t, :] = h.astype(hs_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, seq_len, body, h0_ref[...].astype(jnp.float32))
+    hout_ref[...] = h
+
+
+def rglru_scan(a, gx, h0, *, block_w: int = 512, interpret: bool = False):
+    """a, gx (B,S,W); h0 (B,W) f32 -> (hs (B,S,W) f32, h_final (B,W) f32)."""
+    B, S, W = a.shape
+    bw = min(block_w, W)
+    while W % bw:
+        bw //= 2
+    grid = (B, W // bw)
+    kernel = functools.partial(_rglru_kernel, seq_len=S)
+    hs, hout = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, S, bw), lambda b, w: (b, 0, w)),
+            pl.BlockSpec((None, S, bw), lambda b, w: (b, 0, w)),
+            pl.BlockSpec((None, bw), lambda b, w: (b, w)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, S, bw), lambda b, w: (b, 0, w)),
+            pl.BlockSpec((None, bw), lambda b, w: (b, w)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+            jax.ShapeDtypeStruct((B, W), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, gx, h0)
+    return hs, hout

@@ -1,0 +1,124 @@
+"""Parse collective ops (kind, bytes, mesh axis) out of compiled HLO text.
+
+Used by the dry-run records and the roofline analysis: cost_analysis() has no
+collective accounting, so we regex the optimized HLO for
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute,
+sum their result-buffer bytes, and classify each op onto a mesh axis via its
+replica_groups (explicit {{0,1,..}} or iota [G,S]<=[dims]T(perm) form).
+
+Caveat (documented in EXPERIMENTS.md): ops inside while-loop bodies appear
+once; per-layer costs are therefore extracted from unrolled 1-group /
+2-group lowerings and scaled analytically.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_group(rg: str) -> Optional[List[int]]:
+    """First replica group from either representation."""
+    m = re.match(r"\{\{([0-9,]+)\}", rg)
+    if m:
+        return [int(x) for x in m.group(1).split(",")]
+    # iota form: [G,S]<=[d0,d1,...]T(p0,p1,...) or [G,S]<=[N]
+    m = re.match(r"\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?", rg)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        n = int(np.prod(dims))
+        order = np.arange(n).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            order = order.transpose(perm)
+        return list(order.reshape(g, s)[0])
+    return None
+
+
+def classify_axis(group: Optional[List[int]], mesh_shape: Dict[str, int]
+                  ) -> str:
+    """Map a replica group to the mesh axis it spans. Device ids are row-major
+    over the mesh axes in order."""
+    if not group or len(group) < 2:
+        return "none"
+    axes = list(mesh_shape.items())
+    strides = {}
+    s = 1
+    for name, size in reversed(axes):
+        strides[name] = s
+        s *= size
+    stride = group[1] - group[0]
+    for name, size in axes:
+        if stride == strides[name] and len(group) == size:
+            # verify arithmetic progression
+            if all(group[i + 1] - group[i] == stride
+                   for i in range(len(group) - 1)):
+                return name
+    # combined axes (e.g. ("pod","data") batch sharding): match product sizes
+    for i in range(len(axes)):
+        for j in range(i + 1, len(axes) + 1):
+            names = [a for a, _ in axes[i:j]]
+            size = int(np.prod([mesh_shape[a] for a in names]))
+            if len(group) == size:
+                return "+".join(names)
+    return "mixed"
+
+
+def collective_stats(hlo_text: str, mesh_shape: Dict[str, int]):
+    """Returns {(kind, axis): {"bytes": int, "count": int}} plus totals."""
+    stats = defaultdict(lambda: {"bytes": 0, "count": 0})
+    # one HLO instruction per line in optimized dumps
+    for line in hlo_text.splitlines():
+        m = re.search(
+            r"=\s*((?:\([^)]*\))|(?:[\w\[\],{}\/ ]+?))\s*"
+            r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+            r"collective-permute)(?:-start|-done)?\(", line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # bytes counted at the -start op
+        shape_str, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_str)
+        rg = re.search(r"replica_groups=(\{\{[0-9,{} ]+\}\}|\[[^\]]+\]"
+                       r"<=\[[0-9,]+\](?:T\([0-9,]+\))?)", line)
+        axis = "unknown"
+        if rg:
+            axis = classify_axis(_first_group(rg.group(1)), mesh_shape)
+        elif "collective-permute" in kind:
+            sp = re.search(r"source_target_pairs=\{\{(\d+),(\d+)\}", line)
+            if sp:
+                axis = classify_axis([int(sp.group(1)), int(sp.group(2))],
+                                     mesh_shape)
+        key = (kind, axis)
+        stats[key]["bytes"] += nbytes
+        stats[key]["count"] += 1
+    out = {f"{k}@{a}": v for (k, a), v in stats.items()}
+    out["_total_bytes"] = sum(v["bytes"] for v in stats.values())
+    out["_total_count"] = sum(v["count"] for v in stats.values())
+    return out

@@ -1,0 +1,26 @@
+"""Production meshes. TPU v5e target: one pod = 256 chips as (data=16,
+model=16); multi-pod adds a leading DCN "pod" axis (the DASO global axis).
+
+A function, not a module constant: importing this module must never touch
+jax device state (smoke tests see 1 CPU device)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_pods: int = 2, data: int = 2, model: int = 2):
+    """Small mesh for multi-device CPU tests (XLA host platform devices)."""
+    return jax.make_mesh((n_pods, data, model), ("pod", "data", "model"))
+
+
+# -- hardware constants (TPU v5e) used by the roofline analysis -------------
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link (intra-pod)
+DCN_BW = 25e9                  # bytes/s per host aggregate (cross-pod)

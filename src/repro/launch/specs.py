@@ -1,0 +1,157 @@
+"""ShapeDtypeStruct input stand-ins + sharding assembly for every
+(architecture x input shape) pair — the shannon/kernels dry-run pattern:
+weak-type-correct, shardable, zero device allocation.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.lm import init_cache, init_params
+from repro.sharding import MeshPolicy, param_specs
+from repro.sharding.policy import param_shardings
+
+S = jax.ShapeDtypeStruct
+
+# name -> (seq_len, global_batch, kind)
+INPUT_SHAPES = {
+    "train_4k":    (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k":  (32_768, 128, "decode"),
+    "long_500k":   (524_288, 1, "decode"),
+}
+
+
+def needs_window_override(cfg: ArchConfig, shape_name: str) -> int:
+    """long_500k on a full-attention arch runs the sliding-window variant."""
+    if shape_name == "long_500k" and not cfg.is_subquadratic():
+        assert cfg.long_context_window > 0, cfg.name
+        return cfg.long_context_window
+    return 0
+
+
+def batch_specs(cfg: ArchConfig, shape_name: str):
+    """ShapeDtypeStructs for one *training/prefill* batch (no replica dim)."""
+    seq, gb, kind = INPUT_SHAPES[shape_name]
+    pre = cfg.prefix_embed_len
+    specs = {"tokens": S((gb, seq - pre), jnp.int32)}
+    if kind == "train":
+        specs["labels"] = S((gb, seq), jnp.int32)
+    if pre:
+        specs["prefix_embeds"] = S((gb, pre, cfg.d_model), cfg.cdtype())
+    return specs
+
+
+def decode_specs(cfg: ArchConfig, shape_name: str):
+    """(token, pos, cache) ShapeDtypeStructs for a serve_step."""
+    seq, gb, kind = INPUT_SHAPES[shape_name]
+    assert kind == "decode"
+    wo = needs_window_override(cfg, shape_name)
+    cache = jax.eval_shape(
+        functools.partial(init_cache, cfg, gb, seq, dtype=cfg.cdtype(),
+                          window_override=wo))
+    return {"token": S((gb, 1), jnp.int32), "pos": S((), jnp.int32),
+            "cache": cache}
+
+
+def params_struct(cfg: ArchConfig):
+    return jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def param_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+
+# -- sharding assembly -------------------------------------------------------
+
+def make_policy(mesh, *, daso: bool = False, fsdp: bool = False,
+                seq_sharded: bool = False) -> MeshPolicy:
+    multi_pod = "pod" in mesh.axis_names
+    if daso:
+        assert multi_pod, "DASO replicas need the pod axis"
+        batch_axes = ("data",)           # per-replica batch (under vmap)
+        replica = "pod"
+    else:
+        batch_axes = ("pod", "data") if multi_pod else ("data",)
+        replica = None
+    return MeshPolicy(mesh=mesh, batch_axes=batch_axes, model_axis="model",
+                      replica_axis=replica,
+                      fsdp_axis="data" if fsdp else None,
+                      seq_axis="data" if seq_sharded else None)
+
+
+def batch_shardings(specs, policy: MeshPolicy, *, n_replicas: int = 0):
+    """n_replicas > 0: add the leading DASO replica dim (sharded over pod)."""
+    def one(leaf):
+        lead = ("replica", "batch") if n_replicas else ("batch",)
+        spec = lead + (None,) * (leaf.ndim - len(lead))
+        return policy.sharding(*spec)
+
+    out = {}
+    for k, v in specs.items():
+        if n_replicas:
+            v = S((n_replicas, v.shape[0] // n_replicas) + v.shape[1:],
+                  v.dtype)
+        out[k] = (v, one(v))
+    return ({k: v for k, (v, _) in out.items()},
+            {k: s for k, (_, s) in out.items()})
+
+
+def cache_shardings(cache, cfg: ArchConfig, policy: MeshPolicy,
+                    global_batch: int):
+    """PartitionSpecs for the decode cache.
+
+    Batch shards over (pod)x(data) when divisible; the KV-cache *sequence*
+    dim additionally shards over "model" (split-KV decode — GSPMD inserts the
+    partial-softmax reduction). For global_batch==1 (long_500k) the seq dim
+    takes every mesh axis instead. State caches (mamba/rglru) shard their
+    channel dim over "model"."""
+    mesh = policy.mesh
+    b_axes = policy.resolve("batch")
+    b_axes_t = b_axes if isinstance(b_axes, tuple) else (b_axes,)
+    b_shards = 1
+    for a in b_axes_t:
+        b_shards *= mesh.shape[a]
+    batch_ok = global_batch % b_shards == 0
+
+    b_spec = b_axes if batch_ok else None
+    seq_spec = ("model",) if batch_ok else tuple(mesh.axis_names)
+
+    def one(path, leaf):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = str(p.key)
+                break
+        nd = leaf.ndim
+        model_ax = policy.model_axis
+        if name in ("k", "v"):        # (B, S, K, hd)
+            spec = (b_spec, seq_spec, None, None)
+        elif name == "h" and cfg.ssm is not None:   # mamba: (B, Di, N)
+            spec = (b_spec, model_ax, None)
+        elif name == "h":                            # rglru: (B, W)
+            spec = (b_spec, model_ax)
+        elif name == "conv":          # (B, kc-1, C)
+            spec = (b_spec, None, model_ax)
+        else:
+            spec = (None,) * nd
+        # stacked group caches carry a leading repeat dim
+        spec = (None,) * (nd - len(spec)) + spec
+        assert len(spec) == nd, (name, spec, leaf.shape)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def make_param_shardings(cfg: ArchConfig, params, policy: MeshPolicy,
+                         *, replicated: bool = False):
+    moe_mode = cfg.moe.sharding if cfg.moe is not None else "expert"
+    return param_shardings(params, policy, moe_sharding=moe_mode,
+                           replicated=replicated)

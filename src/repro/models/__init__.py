@@ -1,0 +1,4 @@
+from repro.models.lm import (  # noqa: F401
+    DecoderLM,
+    init_params,
+)

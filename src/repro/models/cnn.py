@@ -1,0 +1,139 @@
+"""ResNet family (the paper's own ImageNet benchmark model) in pure JAX.
+
+Batch norm computes batch statistics with plain jnp.mean over the (sharded)
+batch dim — under GSPMD that mean is reduced over the "data" axis, i.e. it IS
+the paper's node-local synchronized batch norm; under the DASO vmap-over-pod
+replica axis the stats stay per-pod, matching the paper's setup (§4.2).
+Running statistics are carried in a separate `state` pytree.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.resnet50 import ResNetConfig
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return jax.random.truncated_normal(key, -2, 2, (kh, kw, cin, cout)) * (
+        (2.0 / fan_in) ** 0.5)
+
+
+def _bn_init(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def _bn_state(c):
+    return {"mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+
+
+def batch_norm(x, p, s, *, train: bool, momentum=0.9, eps=1e-5):
+    if train:
+        mean = x.mean(axis=(0, 1, 2))
+        var = x.var(axis=(0, 1, 2))
+        new_s = {"mean": momentum * s["mean"] + (1 - momentum) * mean,
+                 "var": momentum * s["var"] + (1 - momentum) * var}
+    else:
+        mean, var = s["mean"], s["var"]
+        new_s = s
+    y = (x - mean) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y, new_s
+
+
+def init_resnet(cfg: ResNetConfig, key):
+    keys = iter(jax.random.split(key, 256))
+    width = cfg.width
+    params = {"stem": {"conv": _conv_init(next(keys), 7, 7, 3, width),
+                       "bn": _bn_init(width)}}
+    state = {"stem": {"bn": _bn_state(width)}}
+    exp = 4 if cfg.bottleneck else 1
+    cin = width
+    for i, n_blocks in enumerate(cfg.stage_sizes):
+        cmid = width * (2 ** i)
+        cout = cmid * exp
+        stage_p, stage_s = [], []
+        for b in range(n_blocks):
+            stride = 2 if (b == 0 and i > 0) else 1
+            blk_p, blk_s = {}, {}
+            if cfg.bottleneck:
+                blk_p["conv1"] = _conv_init(next(keys), 1, 1, cin, cmid)
+                blk_p["conv2"] = _conv_init(next(keys), 3, 3, cmid, cmid)
+                blk_p["conv3"] = _conv_init(next(keys), 1, 1, cmid, cout)
+                for j, c in (("bn1", cmid), ("bn2", cmid), ("bn3", cout)):
+                    blk_p[j] = _bn_init(c)
+                    blk_s[j] = _bn_state(c)
+            else:
+                blk_p["conv1"] = _conv_init(next(keys), 3, 3, cin, cmid)
+                blk_p["conv2"] = _conv_init(next(keys), 3, 3, cmid, cout)
+                for j, c in (("bn1", cmid), ("bn2", cout)):
+                    blk_p[j] = _bn_init(c)
+                    blk_s[j] = _bn_state(c)
+            if stride != 1 or cin != cout:
+                blk_p["proj"] = _conv_init(next(keys), 1, 1, cin, cout)
+                blk_p["proj_bn"] = _bn_init(cout)
+                blk_s["proj_bn"] = _bn_state(cout)
+            stage_p.append(blk_p)
+            stage_s.append(blk_s)
+            cin = cout
+        params[f"stage{i}"] = stage_p
+        state[f"stage{i}"] = stage_s
+    params["head"] = {"w": jnp.zeros((cin, cfg.n_classes)),
+                      "b": jnp.zeros((cfg.n_classes,))}
+    return params, state
+
+
+def _block_apply(p, s, x, *, stride: int, bottleneck: bool, train: bool):
+    new_s = {}
+    r = x
+    if bottleneck:
+        h = _conv(x, p["conv1"])
+        h, new_s["bn1"] = batch_norm(h, p["bn1"], s["bn1"], train=train)
+        h = jax.nn.relu(h)
+        h = _conv(h, p["conv2"], stride)
+        h, new_s["bn2"] = batch_norm(h, p["bn2"], s["bn2"], train=train)
+        h = jax.nn.relu(h)
+        h = _conv(h, p["conv3"])
+        h, new_s["bn3"] = batch_norm(h, p["bn3"], s["bn3"], train=train)
+    else:
+        h = _conv(x, p["conv1"], stride)
+        h, new_s["bn1"] = batch_norm(h, p["bn1"], s["bn1"], train=train)
+        h = jax.nn.relu(h)
+        h = _conv(h, p["conv2"])
+        h, new_s["bn2"] = batch_norm(h, p["bn2"], s["bn2"], train=train)
+    if "proj" in p:
+        r = _conv(x, p["proj"], stride)
+        r, new_s["proj_bn"] = batch_norm(r, p["proj_bn"], s["proj_bn"],
+                                         train=train)
+    return jax.nn.relu(h + r), new_s
+
+
+def resnet_apply(params, state, images, cfg: ResNetConfig, *, train: bool):
+    """images (B,H,W,3) -> (logits (B,n_classes), new_state)."""
+    new_state = {"stem": {}}
+    h = _conv(images, params["stem"]["conv"], stride=2)
+    h, new_state["stem"]["bn"] = batch_norm(
+        h, params["stem"]["bn"], state["stem"]["bn"], train=train)
+    h = jax.nn.relu(h)
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    for i in range(len(cfg.stage_sizes)):
+        stage_s = []
+        for b, (p, s) in enumerate(zip(params[f"stage{i}"],
+                                       state[f"stage{i}"])):
+            stride = 2 if (b == 0 and i > 0) else 1
+            h, ns = _block_apply(p, s, h, stride=stride,
+                                 bottleneck=cfg.bottleneck, train=train)
+            stage_s.append(ns)
+        new_state[f"stage{i}"] = stage_s
+    h = h.mean(axis=(1, 2))
+    logits = h @ params["head"]["w"] + params["head"]["b"]
+    return logits, new_state

@@ -1,0 +1,109 @@
+"""Shared building blocks: norms, initializers, activations, losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def head_rms_norm(x, scale, eps=1e-6):
+    """qk-norm: RMS over the head_dim of (B, S, H, D) tensors."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def dense_init(key, shape, dtype, scale=None, axis=0):
+    fan_in = shape[axis]
+    if scale is None:
+        scale = 1.0
+    std = scale / jnp.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def silu_mlp(x, w1, w3, w2):
+    """SwiGLU FFN. x (..., D); w1,w3 (D,F); w2 (F,D)."""
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def sinusoidal_positions(positions, dim, max_wavelength=10000.0):
+    """positions (...,) int -> (..., dim) float32 sinusoidal embedding."""
+    half = dim // 2
+    freq = jnp.exp(-jnp.log(max_wavelength) * jnp.arange(half) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def cross_entropy_loss(logits, labels, mask=None, *, vocab_chunk: int = 0):
+    """Mean token CE in fp32. labels == -1 are ignored.
+
+    vocab_chunk > 0 enables the chunked-vocab path (never materializes the
+    fp32 (tokens, V) log-softmax at once) — a beyond-paper memory optimization
+    for 150k-256k vocabularies; see EXPERIMENTS.md §Perf.
+    """
+    valid = (labels >= 0)
+    if mask is not None:
+        valid = valid & mask.astype(bool)
+    labels_c = jnp.clip(labels, 0)
+    if vocab_chunk and logits.shape[-1] % vocab_chunk == 0:
+        nll = _chunked_nll(logits, labels_c, vocab_chunk)
+    else:
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # one-hot contraction, NOT take_along_axis: a gather over the
+        # model-sharded vocab dim would all-gather the full logits; the
+        # masked reduce partitions cleanly (partial sums + psum).
+        V = logits.shape[-1]
+        oh = (labels_c[..., None] == jnp.arange(V, dtype=labels_c.dtype))
+        tgt = jnp.sum(logits * oh, axis=-1)
+        nll = lse - tgt
+    nll = jnp.where(valid, nll, 0.0)
+    denom = jnp.maximum(valid.sum(), 1)
+    return nll.sum() / denom
+
+
+def _chunked_nll(logits, labels, chunk):
+    """Two-pass (max, then sum-exp) vocab-chunked NLL; fp32 accumulators only
+    of shape (tokens,)."""
+    V = logits.shape[-1]
+    n = V // chunk
+
+    def scan_max(carry, i):
+        sl = jax.lax.dynamic_slice_in_dim(logits, i * chunk, chunk, axis=-1)
+        return jnp.maximum(carry, sl.astype(jnp.float32).max(-1)), None
+
+    m, _ = jax.lax.scan(scan_max,
+                        jnp.full(logits.shape[:-1], -jnp.inf, jnp.float32),
+                        jnp.arange(n))
+
+    def scan_sum(carry, i):
+        s, tgt = carry
+        sl = jax.lax.dynamic_slice_in_dim(logits, i * chunk, chunk, axis=-1)
+        sl = sl.astype(jnp.float32)
+        s = s + jnp.exp(sl - m[..., None]).sum(-1)
+        idx = labels - i * chunk
+        hit = (idx >= 0) & (idx < chunk)
+        t = jnp.take_along_axis(sl, jnp.clip(idx, 0, chunk - 1)[..., None],
+                                axis=-1)[..., 0]
+        tgt = jnp.where(hit, t, tgt)
+        return (s, tgt), None
+
+    (s, tgt), _ = jax.lax.scan(
+        scan_sum, (jnp.zeros_like(m), jnp.zeros_like(m)), jnp.arange(n))
+    return jnp.log(s) + m - tgt

@@ -1,0 +1,182 @@
+"""Mamba-1 selective SSM mixer (Falcon-Mamba style).
+
+Sequence mixing uses a chunked linear recurrence: a python loop over
+sequence chunks (static trip count -> correct FLOP accounting; bounded
+(B, chunk, d_inner, N) temporaries) with `jax.lax.associative_scan` inside
+each chunk. The recurrence h_t = da_t * h_{t-1} + db_t is combined with
+(aL,bL)x(aR,bR) = (aR*aL, aR*bL + bR) — stable since da in (0,1).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def init_mamba(key, cfg, dtype):
+    s = cfg.ssm
+    D, Di, N, R = cfg.d_model, cfg.d_inner, s.d_state, cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba paper)
+    u = jax.random.uniform(ks[4], (Di,), jnp.float32)
+    dt_init = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None], (Di, 1))
+    return {
+        "norm": jnp.zeros((D,), dtype),
+        "in_proj": dense_init(ks[0], (D, 2 * Di), dtype),
+        "conv_w": dense_init(ks[1], (Di, s.d_conv), dtype, scale=1.0, axis=1),
+        "conv_b": jnp.zeros((Di,), dtype),
+        "x_proj": dense_init(ks[2], (Di, R + 2 * N), dtype),
+        "dt_proj": dense_init(ks[3], (R, Di), jnp.float32),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(A),
+        "Dskip": jnp.ones((Di,), jnp.float32),
+        "out_proj": dense_init(ks[5], (Di, D), dtype,
+                               scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def _assoc_combine(l, r):
+    al, bl = l
+    ar, br = r
+    return ar * al, ar * bl + br
+
+
+def _pick_chunk(S: int, chunk: int) -> int:
+    c = min(chunk, S)
+    while S % c:
+        c //= 2
+    return max(c, 1)
+
+
+def _to_chunks(x, nc, c):
+    """(B, S, ...) -> (nc, B, c, ...) for lax.scan consumption."""
+    B = x.shape[0]
+    return x.reshape((B, nc, c) + x.shape[2:]).swapaxes(0, 1)
+
+
+def selective_scan(xh, dt, A, Bm, Cm, h0, *, chunk: int = 64,
+                   unroll: bool = False):
+    """Fused selective scan: y_t = C_t . h_t with
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t. Never materializes the full
+    (B,S,Di,N) state history — the (da, db) chunk tensors live only inside the
+    (checkpointed) chunk body, and only (B,S,Di) outputs are stacked.
+
+    xh (B,S,Di) compute dtype; dt (B,S,Di) f32; A (Di,N) f32;
+    Bm, Cm (B,S,N); h0 (B,Di,N) f32. Returns (y (B,S,Di) f32->xh dtype, h)."""
+    B, S, Di = xh.shape
+    c = _pick_chunk(S, chunk)
+    nc = S // c
+
+    def chunk_body(h, xs):
+        dt_c, x_c, B_c, C_c = xs  # (B,c,Di), (B,c,Di), (B,c,N), (B,c,N)
+        da = jnp.exp(dt_c[..., None] * A)                     # (B,c,Di,N)
+        db = ((dt_c * x_c.astype(jnp.float32))[..., None]
+              * B_c.astype(jnp.float32)[:, :, None, :])
+        acc_a, acc_b = jax.lax.associative_scan(_assoc_combine, (da, db),
+                                                axis=1)
+        hc = acc_a * h[:, None] + acc_b                       # (B,c,Di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", hc, C_c.astype(jnp.float32))
+        return hc[:, -1], y.astype(xh.dtype)
+
+    body = jax.checkpoint(chunk_body)
+    xs = (_to_chunks(dt, nc, c), _to_chunks(xh, nc, c),
+          _to_chunks(Bm, nc, c), _to_chunks(Cm, nc, c))
+    if unroll:
+        ys, h = [], h0
+        for i in range(nc):
+            h, y = body(h, jax.tree.map(lambda t: t[i], xs))
+            ys.append(y)
+        ys = jnp.stack(ys)
+    else:
+        h, ys = jax.lax.scan(body, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(B, S, Di)
+    return y, h
+
+
+def linear_recurrence(da, db, h0, *, chunk: int = 512, unroll: bool = False):
+    """Diagonal recurrence h_t = da_t*h_{t-1} + db_t along axis 1 for (B,S,W)
+    tensors (RG-LRU). Returns (hs (B,S,W) in db dtype, h_final f32)."""
+    B, S = da.shape[:2]
+    c = _pick_chunk(S, chunk)
+    nc = S // c
+
+    def chunk_body(h, xs):
+        a_c, b_c = xs
+        acc_a, acc_b = jax.lax.associative_scan(_assoc_combine, (a_c, b_c),
+                                                axis=1)
+        hc = acc_a * h[:, None] + acc_b
+        return hc[:, -1], hc
+
+    body = jax.checkpoint(chunk_body)
+    xs = (_to_chunks(da, nc, c), _to_chunks(db, nc, c))
+    if unroll:
+        ys, h = [], h0
+        for i in range(nc):
+            h, y = body(h, jax.tree.map(lambda t: t[i], xs))
+            ys.append(y)
+        ys = jnp.stack(ys)
+    else:
+        h, ys = jax.lax.scan(body, h0, xs)
+    hs = ys.swapaxes(0, 1).reshape(da.shape)
+    return hs, h
+
+
+def causal_conv1d(x, w, b, carry: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv over seq. x (B,S,Di); w (Di,Kc); carry (B,Kc-1,Di)
+    holds the previous Kc-1 inputs (decode). Returns (y, new_carry)."""
+    B, S, Di = x.shape
+    Kc = w.shape[1]
+    if carry is None:
+        carry = jnp.zeros((B, Kc - 1, Di), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)          # (B, S+Kc-1, Di)
+    y = sum(xp[:, i:i + S] * w[:, i] for i in range(Kc)) + b
+    new_carry = xp[:, -(Kc - 1):] if Kc > 1 else carry
+    return y, new_carry
+
+
+def mamba_apply(p, x, cfg, *, cache: Optional[dict] = None, chunk: int = 64,
+                unroll: bool = False):
+    """Pre-normed mamba mixer body (norm applied by caller). x (B,S,D).
+    Returns (delta (B,S,D), new_cache)."""
+    s = cfg.ssm
+    B, S, D = x.shape
+    Di, N, R = cfg.d_inner, s.d_state, cfg.dt_rank
+    xz = x @ p["in_proj"]
+    xh, z = jnp.split(xz, 2, axis=-1)                 # (B,S,Di) each
+    conv_carry = cache["conv"] if cache is not None else None
+    xh, new_conv = causal_conv1d(xh, p["conv_w"], p["conv_b"], conv_carry)
+    xh = jax.nn.silu(xh)
+
+    proj = xh @ p["x_proj"]                           # (B,S,R+2N)
+    dt, Bm, Cm = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) @ p["dt_proj"]
+                         + p["dt_bias"])              # (B,S,Di) fp32
+    A = -jnp.exp(p["A_log"])                          # (Di,N)
+
+    h0 = (cache["h"] if cache is not None
+          else jnp.zeros((B, Di, N), jnp.float32))
+    if S == 1:  # decode fast-path
+        da = jnp.exp(dt[:, 0, :, None] * A)
+        db = ((dt[:, 0] * xh[:, 0].astype(jnp.float32))[..., None]
+              * Bm[:, 0].astype(jnp.float32)[:, None, :])
+        h = da * h0 + db
+        y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0].astype(jnp.float32))[:, None]
+    else:
+        y, h = selective_scan(xh, dt, A, Bm, Cm, h0, chunk=chunk,
+                              unroll=unroll)
+    y = y.astype(jnp.float32) + p["Dskip"] * xh.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    delta = y @ p["out_proj"]
+    new_cache = {"conv": new_conv, "h": h} if cache is not None else None
+    return delta, new_cache
+
+
+def init_mamba_cache(cfg, batch, dtype):
+    s = cfg.ssm
+    return {"conv": jnp.zeros((batch, s.d_conv - 1, cfg.d_inner), dtype),
+            "h": jnp.zeros((batch, cfg.d_inner, s.d_state), jnp.float32)}

@@ -1,0 +1,103 @@
+"""Mixture-of-Experts FFN with GShard-style dispatch-mask routing.
+
+TPU-idiomatic dense dispatch (one-hot capacity einsums, no gather/scatter):
+under GSPMD this partitions as expert parallelism (expert axis over "model")
+or tensor parallelism (per-expert d_ff over "model") per MoEConfig.sharding —
+see DESIGN.md §6. Aux losses: switch load-balance + router z-loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, silu_mlp
+
+
+def init_moe(key, cfg, dtype):
+    m = cfg.moe
+    D, F, E = cfg.d_model, m.d_ff, m.n_experts
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], (D, E), jnp.float32),
+        "we1": dense_init(ks[1], (E, D, F), dtype),
+        "we3": dense_init(ks[2], (E, D, F), dtype),
+        "we2": dense_init(ks[3], (E, F, D), dtype,
+                          scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+    }
+    if m.n_shared_experts:
+        Fs = m.d_ff * m.n_shared_experts
+        p["shared"] = {
+            "w1": dense_init(ks[4], (D, Fs), dtype),
+            "w3": dense_init(ks[5], (D, Fs), dtype),
+            "w2": dense_init(ks[6], (Fs, D), dtype,
+                             scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+        }
+    return p
+
+
+def moe_apply(p, x, cfg):
+    """x (B,S,D) -> (out (B,S,D), aux dict of scalar losses).
+
+    Tokens are routed in groups of moe.group_size (GShard-style): capacity
+    is per group, so the dispatch/combine tensors stay O(G^2 K/E) per group
+    regardless of sequence length (a 32k sequence routed as ONE group would
+    need a (32768, E, 8192)-sized combine — see EXPERIMENTS.md §Perf P3)."""
+    m = cfg.moe
+    B0, S0, D = x.shape
+    G = m.group_size
+    if S0 > G and S0 % G == 0:
+        x = x.reshape(B0 * (S0 // G), G, D)
+    out, aux = _moe_grouped(p, x, cfg)
+    if out.shape[:2] != (B0, S0):
+        out = out.reshape(B0, S0, D)
+    return out, aux
+
+
+def _moe_grouped(p, x, cfg):
+    m = cfg.moe
+    B, S, D = x.shape
+    E, K = m.n_experts, m.top_k
+    C = max(1, int(S * K * m.capacity_factor / E))
+
+    logits = (x.astype(jnp.float32) @ p["router"])          # (B,S,E) fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)           # (B,S,K)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # -- capacity assignment (per-group), GShard style ---------------------
+    # combine accumulates in the compute dtype: it holds disjoint one-hot
+    # slots weighted by gates in [0,1], so bf16 is exact enough and halves
+    # the largest routing tensor (§Perf P3).
+    combine = jnp.zeros((B, S, E, C), x.dtype)
+    counts = jnp.zeros((B, E), jnp.float32)
+    for slot in range(K):
+        oh = jax.nn.one_hot(gate_idx[:, :, slot], E)        # (B,S,E)
+        pos = jnp.cumsum(oh, axis=1) - 1 + counts[:, None]  # (B,S,E)
+        in_cap = ((pos < C) * oh).astype(x.dtype)            # (B,S,E)
+        pos_oh = jax.nn.one_hot(jnp.clip(pos, 0, C - 1).astype(jnp.int32), C,
+                                dtype=x.dtype)
+        combine = combine + (gate_vals[:, :, slot, None, None].astype(x.dtype)
+                             * in_cap[..., None] * pos_oh)
+        counts = counts + oh.sum(axis=1)
+
+    dispatch = (combine > 0).astype(x.dtype)                # (B,S,E,C)
+    expert_in = jnp.einsum("bsec,bsd->ebcd", dispatch, x)   # (E,B,C,D)
+    h = jax.nn.silu(jnp.einsum("ebcd,edf->ebcf", expert_in, p["we1"]))
+    h = h * jnp.einsum("ebcd,edf->ebcf", expert_in, p["we3"])
+    expert_out = jnp.einsum("ebcf,efd->ebcd", h, p["we2"])  # (E,B,C,D)
+    out = jnp.einsum("bsec,ebcd->bsd", combine, expert_out)
+
+    if "shared" in p:
+        sh = p["shared"]
+        out = out + silu_mlp(x, sh["w1"], sh["w3"], sh["w2"])
+
+    # -- aux losses (Switch/GShard) ---------------------------------------
+    me = probs.mean(axis=(0, 1))                             # mean router prob
+    # fraction of tokens whose top-1 goes to each expert
+    top1 = jax.nn.one_hot(gate_idx[:, :, 0], E).mean(axis=(0, 1))
+    lb_loss = E * jnp.sum(me * top1) * m.load_balance_loss
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * m.router_z_loss
+    dropped = 1.0 - (dispatch.sum() / (B * S * K))
+    aux = {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss,
+           "moe_drop_frac": dropped}
+    return out, aux

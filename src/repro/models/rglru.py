@@ -1,0 +1,83 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence: r_t = sigmoid(W_a x_t + b_a), i_t = sigmoid(W_i x_t + b_i),
+log a_t = -c * softplus(Lambda) * r_t,  h_t = a_t h_{t-1} + sqrt(1-a_t^2) * (i_t * x_t).
+Uses the same chunked linear-recurrence machinery as the mamba mixer.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.models.mamba import causal_conv1d, linear_recurrence
+from repro.sharding import constrain
+
+
+def init_rglru(key, cfg, dtype):
+    g = cfg.rglru
+    D, W = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 7)
+    # Lambda init so a = exp(-c*softplus(L)) is in ~[0.9, 0.999]
+    u = jax.random.uniform(ks[5], (W,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / g.c_exponent))
+    return {
+        "norm": jnp.zeros((D,), dtype),
+        "wx": dense_init(ks[0], (D, W), dtype),
+        "wy": dense_init(ks[1], (D, W), dtype),
+        "conv1d_w": dense_init(ks[2], (W, g.conv_width), dtype, scale=1.0, axis=1),
+        "conv1d_b": jnp.zeros((W,), dtype),
+        "w_a": dense_init(ks[3], (W, W), jnp.float32),
+        "b_a": jnp.zeros((W,), jnp.float32),
+        "w_i": dense_init(ks[4], (W, W), jnp.float32),
+        "b_i": jnp.zeros((W,), jnp.float32),
+        "a_param": lam,
+        "wo_rec": dense_init(ks[6], (W, D), dtype,
+                             scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def rglru_apply(p, x, cfg, *, cache: Optional[dict] = None, chunk: int = 512,
+                unroll: bool = False):
+    """Pre-normed recurrent mixer body. x (B,S,D) -> (delta, new_cache)."""
+    g = cfg.rglru
+    B, S, D = x.shape
+    y_branch = jax.nn.gelu(x @ p["wy"])                       # (B,S,W)
+    xb = x @ p["wx"]
+    conv_carry = cache["conv"] if cache is not None else None
+    xb, new_conv = causal_conv1d(xb, p["conv1d_w"], p["conv1d_b"], conv_carry)
+
+    # §Perf P4: gate matmuls run in the compute dtype (bf16 MXU; halves the
+    # per-layer cross-shard bytes vs fp32); the sigmoid/recurrence math that
+    # needs range stays fp32. Outputs constrained model-sharded so the psum
+    # fuses to a reduce-scatter on TPU.
+    wd = x.dtype
+    r = jax.nn.sigmoid(constrain(
+        xb @ p["w_a"].astype(wd) + p["b_a"].astype(wd),
+        "batch", None, "model").astype(jnp.float32))
+    i = jax.nn.sigmoid(constrain(
+        xb @ p["w_i"].astype(wd) + p["b_i"].astype(wd),
+        "batch", None, "model").astype(jnp.float32))
+    xf = xb.astype(jnp.float32)
+    log_a = -g.c_exponent * jax.nn.softplus(p["a_param"]) * r  # (B,S,W)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+
+    h0 = (cache["h"] if cache is not None
+          else jnp.zeros((B, xb.shape[-1]), jnp.float32))
+    if S == 1:
+        h = a[:, 0] * h0 + gated[:, 0]
+        hs = h[:, None]
+    else:
+        hs, h = linear_recurrence(a, gated, h0, chunk=chunk, unroll=unroll)
+    out = (hs.astype(x.dtype) * y_branch) @ p["wo_rec"]
+    new_cache = {"conv": new_conv, "h": h} if cache is not None else None
+    return out, new_cache
+
+
+def init_rglru_cache(cfg, batch, dtype):
+    g = cfg.rglru
+    return {"conv": jnp.zeros((batch, g.conv_width - 1, cfg.lru_width), dtype),
+            "h": jnp.zeros((batch, cfg.lru_width), jnp.float32)}

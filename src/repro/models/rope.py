@@ -1,0 +1,51 @@
+"""Rotary position embeddings: standard 1-D RoPE and Qwen2-VL style M-RoPE."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _rot(x, sin, cos):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def rope_freqs(head_dim, theta):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(q, k, positions, theta):
+    """q (B,S,Hq,D), k (B,S,Hk,D), positions (B,S) int32."""
+    freqs = rope_freqs(q.shape[-1], theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    return (_rot(q.astype(jnp.float32), sin, cos).astype(q.dtype),
+            _rot(k.astype(jnp.float32), sin, cos).astype(k.dtype))
+
+
+def mrope_sections(head_dim):
+    """Split of rotary pairs into (temporal, height, width) sections."""
+    half = head_dim // 2
+    h = half // 4
+    return (half - 2 * h, h, h)
+
+
+def apply_mrope(q, k, positions, theta):
+    """M-RoPE: positions (B,S,3) int32 — (t, h, w) per token. Rotary pairs are
+    split into three sections, each rotated by its own position stream
+    [arXiv:2409.12191]."""
+    half = q.shape[-1] // 2
+    freqs = rope_freqs(q.shape[-1], theta)  # (half,)
+    secs = mrope_sections(q.shape[-1])
+    # build per-pair position: section s uses positions[..., s]
+    sec_id = jnp.concatenate([
+        jnp.full((n,), i, jnp.int32) for i, n in enumerate(secs)])  # (half,)
+    pos = jnp.take_along_axis(
+        positions[:, :, :],  # (B,S,3)
+        sec_id[None, None, :].astype(jnp.int32), axis=-1)  # (B,S,half)
+    ang = pos.astype(jnp.float32) * freqs
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    return (_rot(q.astype(jnp.float32), sin, cos).astype(q.dtype),
+            _rot(k.astype(jnp.float32), sin, cos).astype(k.dtype))

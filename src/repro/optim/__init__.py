@@ -1,0 +1,9 @@
+from repro.optim.optimizers import Optimizer, adamw, sgd  # noqa: F401
+from repro.optim.schedules import (  # noqa: F401
+    PlateauState,
+    constant_lr,
+    plateau_decay_init,
+    plateau_decay_update,
+    warmup_cosine,
+    warmup_linear_scaled,
+)

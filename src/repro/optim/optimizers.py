@@ -1,0 +1,94 @@
+"""Pure-function optimizers (optax-style init/update pairs, no dependency).
+
+The paper's experiments use SGD with momentum 0.9 and weight decay 1e-4 as
+the node-local optimizer; DASO wraps whatever local optimizer it is given.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, opt_state, params, lr) -> (new_params, new_state)
+
+
+def sgd(momentum: float = 0.9, weight_decay: float = 1e-4,
+        nesterov: bool = False) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                   params)}
+
+    def update(grads, state, params, lr):
+        def leaf(g, p, mu):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            if momentum:
+                mu = momentum * mu + g
+                g = g + momentum * mu if nesterov else mu
+            return (p.astype(jnp.float32) - lr * g).astype(p.dtype), mu
+
+        if momentum == 0.0:
+            new = jax.tree.map(
+                lambda g, p: leaf(g, p, jnp.zeros_like(g, jnp.float32))[0],
+                grads, params)
+            return new, state
+        out = jax.tree.map(leaf, grads, params, state["mu"])
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda o: isinstance(o, tuple))
+        new_mu = jax.tree.map(lambda o: o[1], out,
+                              is_leaf=lambda o: isinstance(o, tuple))
+        return new_params, {"mu": new_mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        c1 = 1.0 - b1 ** t.astype(jnp.float32)
+        c2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+        def leaf(g, p, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            p32 = p.astype(jnp.float32)
+            p32 = p32 - lr * (upd + weight_decay * p32)
+            return p32.astype(p.dtype), m, v
+
+        out = jax.tree.map(leaf, grads, params, state["m"], state["v"])
+        istuple = lambda o: isinstance(o, tuple)
+        return (jax.tree.map(lambda o: o[0], out, is_leaf=istuple),
+                {"m": jax.tree.map(lambda o: o[1], out, is_leaf=istuple),
+                 "v": jax.tree.map(lambda o: o[2], out, is_leaf=istuple),
+                 "t": t})
+
+    return Optimizer(init, update)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    n = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), n

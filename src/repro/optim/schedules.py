@@ -1,0 +1,63 @@
+"""LR schedules. The paper uses: linear warm-up over 5 epochs, max LR scaled
+by the number of global processes, and plateau decay (x0.5 when the training
+loss is stable for 5 epochs). Plateau detection runs host-side (it also drives
+DASO's B/W schedule, see repro.core.schedule)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.0):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = floor + (peak_lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn
+
+
+def warmup_linear_scaled(base_lr: float, n_processes: int, warmup_steps: int):
+    """Paper setup: peak LR scaled with global process count, linear warmup."""
+    peak = base_lr * n_processes
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        return jnp.where(step < warmup_steps,
+                         peak * (step + 1) / warmup_steps, peak)
+    return fn
+
+
+# --- host-side plateau detection (paper: "loss stable for 5 epochs") -------
+
+@dataclass(frozen=True)
+class PlateauState:
+    best: float = float("inf")
+    since_improve: int = 0
+    scale: float = 1.0
+    n_decays: int = 0
+
+
+def plateau_decay_init() -> PlateauState:
+    return PlateauState()
+
+
+def plateau_decay_update(state: PlateauState, loss: float, *,
+                         patience: int = 5, factor: float = 0.5,
+                         threshold: float = 1e-3):
+    """Returns (new_state, plateaued: bool). `loss` is the epoch/window mean."""
+    improved = loss < state.best * (1.0 - threshold)
+    if improved:
+        return replace(state, best=loss, since_improve=0), False
+    since = state.since_improve + 1
+    if since >= patience:
+        return replace(state, since_improve=0, scale=state.scale * factor,
+                       n_decays=state.n_decays + 1), True
+    return replace(state, since_improve=since), False

@@ -1,0 +1,101 @@
+"""Serving engine: batched prefill + one-token decode over the unified LM.
+
+Decode shapes in the assignment (decode_32k, long_500k) lower
+`make_decode_fn`'s serve_step — one new token against a populated cache.
+Window caches (SWA / local attention / dense long-context override) are ring
+buffers; SSM / RG-LRU layers carry recurrent state instead of KV.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.lm import forward, init_cache
+
+
+def _decode_positions(cfg: ArchConfig, batch: int, pos):
+    p = jnp.full((batch, 1), pos, jnp.int32)
+    if cfg.rope_type == "mrope":
+        return jnp.tile(p[..., None], (1, 1, 3))
+    return p
+
+
+def make_prefill_fn(cfg: ArchConfig, *, cache_len: int,
+                    window_override: int = 0, q_chunk: int = 1024,
+                    mamba_chunk: int = 64):
+    """prefill(params, tokens, prefix_embeds=None, positions=None)
+    -> {"logits_last" (B,V), "cache"}. Cache is sized for `cache_len` total
+    positions (the prompt occupies the first S slots)."""
+    def prefill(params, tokens, prefix_embeds=None, positions=None):
+        B = tokens.shape[0]
+        cache = init_cache(cfg, B, cache_len, dtype=cfg.cdtype(),
+                           window_override=window_override)
+        out = forward(params, tokens, cfg, prefix_embeds=prefix_embeds,
+                      positions=positions, cache=cache,
+                      window_override=window_override, q_chunk=q_chunk,
+                      mamba_chunk=mamba_chunk)
+        return {"logits_last": out["logits"][:, -1], "cache": out["cache"]}
+
+    return prefill
+
+
+def make_decode_fn(cfg: ArchConfig, *, window_override: int = 0):
+    """serve_step(params, cache, token (B,1), pos scalar) ->
+    {"logits" (B,V), "cache"} — exactly one new token."""
+    def serve_step(params, cache, token, pos):
+        B = token.shape[0]
+        out = forward(params, token, cfg,
+                      positions=_decode_positions(cfg, B, pos),
+                      cache=cache, pos=pos,
+                      window_override=window_override)
+        return {"logits": out["logits"][:, -1], "cache": out["cache"]}
+
+    return serve_step
+
+
+@dataclass
+class Engine:
+    """Minimal batched generation engine (greedy / temperature sampling)."""
+    cfg: ArchConfig
+    params: object
+    max_len: int = 256
+    window_override: int = 0
+
+    def __post_init__(self):
+        self._prefill = jax.jit(make_prefill_fn(
+            self.cfg, cache_len=self.max_len,
+            window_override=self.window_override))
+        self._decode = jax.jit(make_decode_fn(
+            self.cfg, window_override=self.window_override))
+
+    def generate(self, prompts: jnp.ndarray, max_new_tokens: int,
+                 *, temperature: float = 0.0,
+                 key: Optional[jax.Array] = None,
+                 prefix_embeds=None):
+        """prompts (B, S_prompt) int32 -> (B, max_new_tokens) int32."""
+        B, S = prompts.shape
+        state = self._prefill(self.params, prompts,
+                              prefix_embeds=prefix_embeds)
+        cache, logits = state["cache"], state["logits_last"]
+        prefix = 0 if prefix_embeds is None else prefix_embeds.shape[1]
+        pos = S + prefix  # next absolute position
+        outs = []
+        for t in range(max_new_tokens):
+            if temperature > 0.0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, logits / temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(logits, axis=-1)
+            nxt = nxt.astype(jnp.int32)[:, None]
+            outs.append(nxt)
+            if t == max_new_tokens - 1:
+                break
+            step_out = self._decode(self.params, cache, nxt,
+                                    jnp.asarray(pos, jnp.int32))
+            logits, cache = step_out["logits"], step_out["cache"]
+            pos += 1
+        return jnp.concatenate(outs, axis=1)

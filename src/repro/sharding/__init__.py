@@ -1,0 +1,7 @@
+from repro.sharding.policy import (  # noqa: F401
+    MeshPolicy,
+    constrain,
+    current_policy,
+    param_specs,
+    use_policy,
+)

@@ -1,0 +1,61 @@
+"""Loss builders connecting models to the DASO / sync step machinery."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import cross_entropy_loss
+from repro.models.lm import forward
+
+
+def make_lm_loss(cfg: ArchConfig, *, q_chunk: int = 1024,
+                 mamba_chunk: int = 64, remat: bool = False,
+                 vocab_chunk: int = 0, window_override: int = 0,
+                 unroll_layers: bool = False):
+    """loss_fn(params, batch) -> (total_loss, aux). batch keys:
+    tokens (B,S), labels (B,S) (-1 = ignore), optional prefix_embeds,
+    positions."""
+    def loss_fn(params, batch):
+        out = forward(params, batch["tokens"], cfg,
+                      prefix_embeds=batch.get("prefix_embeds"),
+                      positions=batch.get("positions"),
+                      q_chunk=q_chunk, mamba_chunk=mamba_chunk,
+                      remat=remat, window_override=window_override,
+                      unroll_layers=unroll_layers)
+        ce = cross_entropy_loss(out["logits"], batch["labels"],
+                                vocab_chunk=vocab_chunk)
+        aux = dict(out["aux"])
+        total = ce + aux["moe_lb_loss"] + aux["moe_z_loss"]
+        aux["ce"] = ce
+        return total, aux
+
+    return loss_fn
+
+
+def make_resnet_loss(cfg, *, mutable_state: bool = False):
+    """ResNet loss. batch: images (B,H,W,3), labels (B,).
+
+    Batch-norm note: for the convergence experiments we fold the batch-stat
+    update into aux (functional); the training loop threads it back. When
+    mutable_state=False the running stats in `batch["bn_state"]` are used
+    read-through (simpler for vmapped DASO replicas, matching the paper's
+    per-node batch norm)."""
+    from repro.models.cnn import resnet_apply
+
+    def loss_fn(params, batch):
+        import jax
+        logits, new_state = resnet_apply(params["net"], batch["bn_state"],
+                                         batch["images"], cfg, train=True)
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        loss = -jnp.take_along_axis(
+            logp, labels[:, None].astype(jnp.int32), axis=-1).mean()
+        acc = (logits.argmax(-1) == labels).mean()
+        aux = {"acc": acc}
+        if mutable_state:
+            aux["bn_state"] = new_state
+        return loss, aux
+
+    return loss_fn

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Make `repro` importable regardless of how pytest is invoked.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: XLA_FLAGS / device-count overrides are intentionally NOT set here —
+# smoke tests must see the real single CPU device. Multi-device distributed
+# tests spawn subprocesses that set --xla_force_host_platform_device_count
+# themselves (see test_distributed.py).

@@ -1,0 +1,66 @@
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.configs.base import ATTN, ATTN_LOCAL, ATTN_SWA, MAMBA, RGLRU
+
+TRANSFORMER_ARCHS = [a for a in ARCH_IDS if a != "resnet50"]
+
+
+@pytest.mark.parametrize("arch", TRANSFORMER_ARCHS)
+def test_full_config_validates(arch):
+    cfg = get_config(arch)
+    cfg.validate()
+    assert cfg.n_layers >= 16
+    assert cfg.source
+
+
+@pytest.mark.parametrize("arch", TRANSFORMER_ARCHS)
+def test_reduced_config_constraints(arch):
+    cfg = get_reduced(arch)
+    cfg.validate()
+    assert cfg.n_layers <= max(2, len(cfg.layer_pattern))
+    assert cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.n_experts <= 4
+
+
+def test_assigned_shapes_exact():
+    """The exact published shapes from the assignment table."""
+    c = get_config("qwen3-8b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (36, 4096, 32, 8, 12288, 151936)
+    assert c.qk_norm
+    c = get_config("falcon-mamba-7b")
+    assert (c.n_layers, c.d_model, c.vocab_size) == (64, 4096, 65024)
+    assert c.ssm.d_state == 16 and c.layer_pattern == (MAMBA,)
+    c = get_config("mixtral-8x22b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads,
+            c.vocab_size) == (56, 6144, 48, 8, 32768)
+    assert c.moe.n_experts == 8 and c.moe.top_k == 2
+    assert c.layer_pattern == (ATTN_SWA,) and c.sliding_window > 0
+    c = get_config("recurrentgemma-9b")
+    assert c.n_layers == 38 and c.layer_pattern == (RGLRU, RGLRU, ATTN_LOCAL)
+    assert c.n_kv_heads == 1
+    c = get_config("moonshot-v1-16b-a3b")
+    assert c.moe.n_experts == 64 and c.moe.top_k == 6 and c.moe.d_ff == 1408
+    c = get_config("granite-moe-3b-a800m")
+    assert c.moe.n_experts == 40 and c.moe.top_k == 8
+    c = get_config("llama3.2-1b")
+    assert c.tie_embeddings and c.vocab_size == 128256
+    c = get_config("qwen2-vl-2b")
+    assert c.rope_type == "mrope" and c.prefix_embed_len > 0
+    c = get_config("musicgen-large")
+    assert c.family == "audio" and c.vocab_size == 2048
+    c = get_config("minitron-8b")
+    assert c.d_ff == 16384 and c.vocab_size == 256000
+
+
+def test_long_context_policy():
+    from repro.launch.specs import needs_window_override
+    for arch in TRANSFORMER_ARCHS:
+        cfg = get_config(arch)
+        wo = needs_window_override(cfg, "long_500k")
+        if cfg.is_subquadratic():
+            assert wo == 0, arch
+        else:
+            assert wo > 0, arch  # dense archs run the windowed variant

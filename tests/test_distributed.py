@@ -1,0 +1,185 @@
+"""Multi-device distributed semantics, run in subprocesses with
+--xla_force_host_platform_device_count (so the main pytest process keeps its
+single real CPU device, per the dry-run contract)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(script: str, devices: int = 8):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                       capture_output=True, text=True, timeout=900, env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def test_daso_mesh_step_matches_single_device_simulator():
+    """The same DASO cycle on a (pod,data,model) mesh and on a single device
+    (simulator layout) must produce identical parameters — proving the mesh
+    execution implements exactly the paper's algorithm."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.daso import (DasoConfig, daso_train_step,
+                                     replicate_params)
+        from repro.optim.optimizers import sgd
+
+        def loss_fn(params, batch):
+            pred = batch["x"] @ params["w"]
+            return jnp.mean((pred - batch["y"]) ** 2), {}
+
+        R, per, d = 2, 8, 16
+        key = jax.random.PRNGKey(0)
+        params0 = {"w": jax.random.normal(key, (d, 4)) * 0.1}
+        opt = sgd(momentum=0.9, weight_decay=1e-4)
+        cfg = DasoConfig(n_replicas=R, global_world=8, b_max=4)
+        modes = ["send", "receive", "local", "local"] * 2
+        steps = [daso_train_step(loss_fn, opt, cfg, mode=m, staleness=1)
+                 for m in modes]
+
+        def data(step):
+            k = jax.random.fold_in(key, step)
+            x = jax.random.normal(k, (R, per, d))
+            y = jax.random.normal(jax.random.fold_in(k, 1), (R, per, 4))
+            return {"x": x, "y": y}
+
+        def run(device_put_fn):
+            p = device_put_fn(replicate_params(params0, R))
+            o = device_put_fn(replicate_params(opt.init(params0), R))
+            infl = jax.tree.map(lambda x: x, p)
+            for t, s in enumerate(steps):
+                p, o, infl, m = jax.jit(s)(p, o, infl, data(t), 0.05)
+            return jax.device_get(p["w"])
+
+        # single-device (simulator) run
+        ref = run(lambda t: t)
+        # mesh run: replica axis sharded over pod, batch over data
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        sh_p = NamedSharding(mesh, P("pod"))
+        put = lambda t: jax.tree.map(
+            lambda x: jax.device_put(x, sh_p), t)
+        got = run(put)
+        np.testing.assert_allclose(got, ref, rtol=2e-5, atol=1e-6)
+        print("MESH==SIM OK")
+    """)
+    assert "MESH==SIM OK" in out
+
+
+def test_daso_cycle_collectives_touch_pod_axis_only_on_sync_steps():
+    """HLO audit: the 'local' step variant must have NO cross-pod collective;
+    the 'send' variant must have one. This is the paper's traffic pattern."""
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.daso import DasoConfig, daso_train_step
+        from repro.launch.hlo_stats import collective_stats
+        from repro.optim.optimizers import sgd
+
+        def loss_fn(params, batch):
+            pred = batch["x"] @ params["w"]
+            return jnp.mean((pred - batch["y"]) ** 2), {}
+
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+        R, per, d = 2, 4, 128  # w is 128x4 f32 = 2 KiB > the 1 KiB threshold
+        opt = sgd(momentum=0.0, weight_decay=0.0)
+        cfg = DasoConfig(n_replicas=R, global_world=4, b_max=4)
+        SDS = jax.ShapeDtypeStruct
+        params = {"w": SDS((R, d, 4), jnp.float32)}
+        opt_state = {}
+        infl = params
+        batch = {"x": SDS((R, per, d), jnp.float32),
+                 "y": SDS((R, per, 4), jnp.float32)}
+        shp = NamedSharding(mesh, P("pod"))
+        shb = NamedSharding(mesh, P("pod", "data"))
+        sc = NamedSharding(mesh, P())
+
+        for mode, expect_pod in [("local", False), ("send", True),
+                                 ("receive", False), ("blocking", True)]:
+            step = daso_train_step(loss_fn, opt, cfg, mode=mode, staleness=1)
+            lowered = jax.jit(step, in_shardings=(
+                {"w": shp}, {}, {"w": shp},
+                {"x": shb, "y": shb}, sc)).lower(
+                params, opt_state, infl, batch, SDS((), jnp.float32))
+            stats = collective_stats(lowered.compile().as_text(), mesh_shape)
+            pod_bytes = sum(v["bytes"] for k, v in stats.items()
+                            if isinstance(v, dict) and "@pod" in k)
+            # scalar metrics (loss mean over replicas) may cross the pod
+            # axis — only parameter-scale traffic counts
+            assert (pod_bytes > 1024) == expect_pod, (mode, stats)
+            print(mode, "pod_bytes", pod_bytes)
+        print("COLLECTIVE AUDIT OK")
+    """)
+    assert "COLLECTIVE AUDIT OK" in out
+
+
+def test_sharded_lm_forward_matches_single_device():
+    """Full reduced-arch LM forward under the production sharding policy on
+    an 8-device mesh == single-device forward."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_reduced
+        from repro.models.lm import init_params, forward
+        from repro.launch.specs import make_policy, make_param_shardings
+        from repro.sharding import use_policy
+
+        cfg = get_reduced("qwen3-8b").replace(vocab_size=512)
+        key = jax.random.PRNGKey(0)
+        params = init_params(cfg, key)
+        toks = jax.random.randint(key, (4, 32), 0, cfg.vocab_size)
+        ref = forward(params, toks, cfg)["logits"]
+
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        policy = make_policy(mesh, fsdp=True)
+        p_sh = make_param_shardings(cfg, params, policy)
+        params_s = jax.tree.map(jax.device_put, params, p_sh)
+        tok_sh = NamedSharding(mesh, P(("pod", "data"), None))
+        toks_s = jax.device_put(toks, tok_sh)
+        with use_policy(policy):
+            got = jax.jit(lambda p, t: forward(p, t, cfg)["logits"],
+                          in_shardings=(p_sh, tok_sh))(params_s, toks_s)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=2e-4)
+        print("SHARDED==LOCAL OK")
+    """)
+    assert "SHARDED==LOCAL OK" in out
+
+
+def test_production_mesh_shapes():
+    out = _run("""
+        from repro.launch.mesh import make_production_mesh
+        m1 = make_production_mesh()
+        assert m1.axis_names == ("data", "model")
+        assert m1.devices.shape == (16, 16)
+        m2 = make_production_mesh(multi_pod=True)
+        assert m2.axis_names == ("pod", "data", "model")
+        assert m2.devices.shape == (2, 16, 16)
+        print("MESH OK")
+    """, devices=512)
+    assert "MESH OK" in out
+
+
+def test_dryrun_contract_end_to_end():
+    """The deliverable-e contract: a full (arch x shape) dry-run record on the
+    real 512-device multi-pod production mesh, lower + compile + memory/cost/
+    collective stats, via the actual CLI entry point."""
+    out = _run("""
+        from repro.launch.dryrun import run_one
+        rec = run_one("llama3.2-1b", "long_500k", multi_pod=True)
+        assert rec["ok"]
+        assert rec["memory"]["peak_estimate_per_device"] > 0
+        assert rec["cost"]["flops"] > 0
+        assert rec["collectives"]["_total_count"] >= 0
+        assert rec["devices"] == 512
+        print("DRYRUN CONTRACT OK")
+    """, devices=512)
+    assert "DRYRUN CONTRACT OK" in out

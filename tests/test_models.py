@@ -1,0 +1,176 @@
+"""Model-component unit + property tests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ref import attention_ref, rglru_scan_ref, ssm_scan_ref
+from repro.models.attention import multihead_attention
+from repro.models.common import cross_entropy_loss
+from repro.models.mamba import linear_recurrence, selective_scan
+from repro.models.rope import apply_mrope, apply_rope
+
+
+def _bhsd_to_bshd(x):
+    return x.swapaxes(1, 2)
+
+
+@pytest.mark.parametrize("Hq,Hk", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("window", [0, 16])
+def test_chunked_attention_matches_ref(Hq, Hk, window):
+    key = jax.random.PRNGKey(0)
+    B, S, D = 2, 64, 32
+    q = jax.random.normal(key, (B, Hq, S, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, Hk, S, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, Hk, S, D))
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    out = multihead_attention(_bhsd_to_bshd(q), _bhsd_to_bshd(k),
+                              _bhsd_to_bshd(v), causal=True, window=window,
+                              q_chunk=16)
+    np.testing.assert_allclose(np.asarray(_bhsd_to_bshd(out)),
+                               np.asarray(ref), atol=2e-5)
+
+
+def test_attention_chunk_size_invariance():
+    key = jax.random.PRNGKey(3)
+    B, H, S, D = 1, 2, 128, 16
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, D))
+    outs = [multihead_attention(q, k, v, q_chunk=c) for c in (16, 32, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                   atol=1e-5)
+
+
+@given(st.integers(8, 64).filter(lambda s: s % 8 == 0),
+       st.sampled_from([4, 8, 16]))
+@settings(max_examples=10, deadline=None)
+def test_selective_scan_chunk_invariance(S, chunk):
+    key = jax.random.PRNGKey(S)
+    B, Di, N = 2, 16, 4
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, Di))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, Di)))
+    A = -jnp.exp(0.5 * jax.random.normal(ks[2], (Di, N)))
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    h0 = jnp.zeros((B, Di, N))
+    y, h = selective_scan(x, dt, A, Bm, Cm, h0, chunk=chunk)
+    yr, hr = ssm_scan_ref(x, dt, A, Bm, Cm, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr.astype(y.dtype)),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=1e-4)
+
+
+def test_selective_scan_state_carry():
+    """Scanning two halves with carried state == scanning the whole."""
+    key = jax.random.PRNGKey(7)
+    B, S, Di, N = 1, 32, 8, 4
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, Di))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, Di)))
+    A = -jnp.exp(0.5 * jax.random.normal(ks[2], (Di, N)))
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    h0 = jnp.zeros((B, Di, N))
+    y_full, h_full = selective_scan(x, dt, A, Bm, Cm, h0, chunk=8)
+    y1, h1 = selective_scan(x[:, :16], dt[:, :16], A, Bm[:, :16],
+                            Cm[:, :16], h0, chunk=8)
+    y2, h2 = selective_scan(x[:, 16:], dt[:, 16:], A, Bm[:, 16:],
+                            Cm[:, 16:], h1, chunk=8)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full), atol=1e-5)
+
+
+def test_linear_recurrence_matches_ref():
+    key = jax.random.PRNGKey(9)
+    B, S, W = 2, 48, 8
+    a = jax.nn.sigmoid(jax.random.normal(key, (B, S, W)))
+    gx = jax.random.normal(jax.random.fold_in(key, 1), (B, S, W))
+    h0 = jnp.zeros((B, W))
+    hs, h = linear_recurrence(a, gx, h0, chunk=16)
+    hsr, hr = rglru_scan_ref(a, gx, h0)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(hsr), atol=1e-5)
+
+
+def test_rope_preserves_norm_and_relative_property():
+    key = jax.random.PRNGKey(11)
+    B, S, H, D = 1, 16, 2, 32
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, D))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    qr, kr = apply_rope(q, k, pos, 10000.0)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(qr, axis=-1)),
+                               np.asarray(jnp.linalg.norm(q, axis=-1)),
+                               rtol=1e-5)
+    # relative property: q_i . k_j depends only on i - j
+    d1 = float(jnp.einsum("d,d->", qr[0, 5, 0], kr[0, 3, 0]))
+    qr2, kr2 = apply_rope(q, k, pos + 7, 10000.0)
+    d2 = float(jnp.einsum("d,d->", qr2[0, 5, 0], kr2[0, 3, 0]))
+    assert abs(d1 - d2) < 1e-3
+
+
+def test_mrope_equals_rope_when_positions_equal():
+    """With t==h==w positions, M-RoPE must reduce to standard RoPE."""
+    key = jax.random.PRNGKey(13)
+    B, S, H, D = 1, 8, 2, 32
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, D))
+    pos1 = jnp.broadcast_to(jnp.arange(S), (B, S))
+    pos3 = jnp.tile(pos1[..., None], (1, 1, 3))
+    q1, k1 = apply_rope(q, k, pos1, 10000.0)
+    q3, k3 = apply_mrope(q, k, pos3, 10000.0)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q3), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(k1), np.asarray(k3), atol=1e-5)
+
+
+def test_cross_entropy_matches_naive_and_chunked():
+    key = jax.random.PRNGKey(17)
+    B, S, V = 2, 8, 64
+    logits = jax.random.normal(key, (B, S, V))
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (B, S), 0, V)
+    labels = labels.at[0, 0].set(-1)  # ignored position
+    naive = -jnp.take_along_axis(
+        jax.nn.log_softmax(logits, -1),
+        jnp.clip(labels, 0)[..., None], axis=-1)[..., 0]
+    naive = jnp.where(labels >= 0, naive, 0.0).sum() / (labels >= 0).sum()
+    got = cross_entropy_loss(logits, labels)
+    np.testing.assert_allclose(float(got), float(naive), rtol=1e-5)
+    chunked = cross_entropy_loss(logits, labels, vocab_chunk=16)
+    np.testing.assert_allclose(float(chunked), float(naive), rtol=1e-5)
+
+
+def test_moe_router_aux_losses_behave():
+    """Uniform router -> minimal load-balance loss; skewed -> larger."""
+    from repro.configs import get_reduced
+    from repro.models.moe import init_moe, moe_apply
+    cfg = get_reduced("mixtral-8x22b")
+    p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    _, aux = moe_apply(p, x, cfg)
+    assert float(aux["moe_drop_frac"]) >= 0.0
+    # router pushed to always pick expert 0 -> lb loss rises
+    p_skew = dict(p)
+    p_skew["router"] = p["router"].at[:, 0].set(50.0)
+    _, aux_skew = moe_apply(p_skew, x, cfg)
+    assert float(aux_skew["moe_lb_loss"]) > float(aux["moe_lb_loss"])
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "mixtral-8x22b"])
+def test_pallas_attention_impl_matches_jnp(arch):
+    """Full model forward with attn_impl='pallas' (flash kernel,
+    interpret=True on CPU) == the jnp chunked path."""
+    from repro.configs import get_reduced
+    from repro.models.lm import forward, init_params
+    cfg = get_reduced(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    toks = jax.random.randint(key, (2, 128), 0, cfg.vocab_size)
+    ref = forward(params, toks, cfg, attn_impl="jnp")["logits"]
+    got = forward(params, toks, cfg, attn_impl="pallas")["logits"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=5e-3)

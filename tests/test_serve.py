@@ -1,0 +1,112 @@
+"""Serving-path integration: prefill + decode must match teacher-forced full
+forward; ring-window caches must equal windowed full attention; the Engine
+must generate deterministically."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models.lm import forward, init_params
+from repro.serve.engine import Engine, make_decode_fn, make_prefill_fn
+
+
+def _no_drop(cfg):
+    if cfg.moe is not None:
+        cf = float(cfg.moe.n_experts) / cfg.moe.top_k
+        return cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                   capacity_factor=cf))
+    return cfg
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "qwen3-8b",
+                                  "falcon-mamba-7b", "recurrentgemma-9b",
+                                  "mixtral-8x22b", "qwen2-vl-2b",
+                                  "moonshot-v1-16b-a3b", "musicgen-large"])
+def test_decode_matches_teacher_forcing(arch):
+    cfg = _no_drop(get_reduced(arch))
+    key = jax.random.PRNGKey(1)
+    params = init_params(cfg, key)
+    B, S = 2, 32
+    pref = cfg.prefix_embed_len
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    pe = (0.1 * jax.random.normal(key, (B, pref, cfg.d_model))
+          if pref else None)
+    full = forward(params, toks, cfg, prefix_embeds=pe)["logits"]
+    S0 = S - 6
+    prefill = make_prefill_fn(cfg, cache_len=S + pref)
+    decode = make_decode_fn(cfg)
+    st = prefill(params, toks[:, :S0], prefix_embeds=pe)
+    cache, logits = st["cache"], [st["logits_last"]]
+    for i in range(6):
+        out = decode(params, cache, toks[:, S0 + i:S0 + i + 1],
+                     jnp.asarray(pref + S0 + i, jnp.int32))
+        logits.append(out["logits"])
+        cache = out["cache"]
+    errs = [float(jnp.max(jnp.abs(full[:, pref + S0 - 1 + i] - logits[i])))
+            for i in range(6)]
+    assert max(errs) < 2e-3, (arch, errs)
+
+
+def test_ring_window_decode_past_window():
+    """Decode far beyond the window: ring cache must equal a windowed full
+    forward (positions > window wrap and evict)."""
+    cfg = _no_drop(get_reduced("mixtral-8x22b")).replace(sliding_window=16)
+    key = jax.random.PRNGKey(3)
+    params = init_params(cfg, key)
+    B, S = 1, 48  # 3x the window
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    full = forward(params, toks, cfg)["logits"]
+    prefill = make_prefill_fn(cfg, cache_len=S)
+    decode = make_decode_fn(cfg)
+    S0 = 8  # prefill shorter than window, then decode across the boundary
+    st = prefill(params, toks[:, :S0])
+    cache, logits = st["cache"], [st["logits_last"]]
+    for i in range(S - S0):
+        out = decode(params, cache, toks[:, S0 + i:S0 + i + 1],
+                     jnp.asarray(S0 + i, jnp.int32))
+        logits.append(out["logits"])
+        cache = out["cache"]
+    errs = [float(jnp.max(jnp.abs(full[:, S0 - 1 + i] - logits[i])))
+            for i in range(S - S0)]
+    assert max(errs) < 2e-3, errs
+
+
+def test_window_override_long_context_variant():
+    """Dense arch with long_context window override: decode must equal a
+    model whose attention is windowed."""
+    cfg = _no_drop(get_reduced("llama3.2-1b"))
+    wo = 16
+    key = jax.random.PRNGKey(5)
+    params = init_params(cfg, key)
+    B, S = 1, 40
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    full_windowed = forward(params, toks, cfg, window_override=wo)["logits"]
+    prefill = make_prefill_fn(cfg, cache_len=S, window_override=wo)
+    decode = make_decode_fn(cfg, window_override=wo)
+    S0 = 20
+    st = prefill(params, toks[:, :S0])
+    cache, logits = st["cache"], [st["logits_last"]]
+    for i in range(S - S0):
+        out = decode(params, cache, toks[:, S0 + i:S0 + i + 1],
+                     jnp.asarray(S0 + i, jnp.int32))
+        logits.append(out["logits"])
+        cache = out["cache"]
+    errs = [float(jnp.max(jnp.abs(full_windowed[:, S0 - 1 + i] - logits[i])))
+            for i in range(S - S0)]
+    assert max(errs) < 2e-3, errs
+
+
+def test_engine_generate_deterministic():
+    cfg = _no_drop(get_reduced("llama3.2-1b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_len=64)
+    prompts = jax.random.randint(jax.random.PRNGKey(2), (3, 8), 0,
+                                 cfg.vocab_size)
+    out1 = eng.generate(prompts, max_new_tokens=8)
+    out2 = eng.generate(prompts, max_new_tokens=8)
+    assert out1.shape == (3, 8)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert int(out1.min()) >= 0 and int(out1.max()) < cfg.vocab_size
