@@ -1,7 +1,11 @@
 """Measured (wall-clock) microbenchmarks of the DASO step variants on an
 8-virtual-device (2 pods x 2 data x 2 model) CPU mesh, via subprocess so the
 main process keeps one device. Times are real; they validate the *relative*
-cost ordering (local < send < blocking), not TPU magnitudes."""
+cost ordering (local < send < blocking), not TPU magnitudes.
+
+Also benchmarks the compiled macro-cycle executor (core/executor.py) against
+the per-step path on a cycling-phase schedule: same numerics, host dispatches
+per B=4 cycle reduced from B+1 step launches to 1 compiled program."""
 from __future__ import annotations
 
 import os
@@ -52,16 +56,103 @@ for mode in ("local", "send", "receive", "blocking"):
 """
 
 
-def emit_rows(emit):
+_CYCLE_SCRIPT = """
+import time
+import jax, jax.numpy as jnp
+from repro.core.daso import DasoConfig
+from repro.core.executor import MacroCycleExecutor, make_strategy
+from repro.core.schedule import DasoController
+from repro.optim.optimizers import sgd
+
+def loss_fn(params, batch):
+    h = jnp.tanh(batch["x"] @ params["w1"])
+    pred = h @ params["w2"]
+    return jnp.mean((pred - batch["y"]) ** 2), {}
+
+# deliberately tiny: this benchmark isolates the host-dispatch overhead the
+# macro-cycle executor removes (small step times = controller-dominated
+# wall-clock, the regime the tentpole targets)
+R, per, d, h, B = 2, 8, 64, 64, 4
+key = jax.random.PRNGKey(0)
+params0 = {"w1": jax.random.normal(key, (d, h)) * 0.05,
+           "w2": jax.random.normal(key, (h, d)) * 0.05}
+def data_fn(step):
+    k = jax.random.fold_in(key, step)
+    return {"x": jax.random.normal(k, (R, per, d)),
+            "y": jax.random.normal(k, (R, per, d))}
+# pure cycling phase (no warm-up/cool-down), frozen B/W: every cycle is the
+# same (send, receive, local, local) shape
+cfg = DasoConfig(n_replicas=R, global_world=8, b_max=B)
+strat = make_strategy("daso", loss_fn, sgd(momentum=0.9), cfg,
+                      controller=DasoController(cfg, loss_window=10**9))
+ex = MacroCycleExecutor(strat)
+plan = strat.plan_cycle(0, 32)
+assert len(plan) == B, plan.shape
+steps = list(range(B))
+batches = jax.tree.map(lambda *xs: jnp.stack(xs),
+                       *[data_fn(t) for t in steps])
+lrs = jnp.asarray([0.01] * B, jnp.float32)
+stepwise = [jax.jit(strat.step_fn(m, s)) for m, s in plan.shape]
+
+# warm both paths (compile), threading the carry (run_cycle donates it)
+carry = strat.init_carry(params0)
+carry, _ = ex.run_cycle(carry, plan, batches, lrs)
+for i, fn in enumerate(stepwise):
+    carry, _ = fn(carry, jax.tree.map(lambda x, j=i: x[j], batches), lrs[i])
+jax.block_until_ready(carry)
+
+# Both timed loops reproduce what the host loop really does per step/cycle:
+# dispatch + blocking metrics readback (the controller consumes the loss).
+n = 30
+ex.stats.dispatches = 0
+t0 = time.perf_counter()
+for _ in range(n):
+    carry, m = ex.run_cycle(carry, plan, batches, lrs)
+    _ = float(m["loss"][0])        # one readback per cycle
+jax.block_until_ready(carry)
+t_macro = (time.perf_counter() - t0) / n * 1e6
+d_macro = ex.stats.dispatches / n  # = 1: one fused program per cycle
+
+t0 = time.perf_counter()
+for _ in range(n):
+    for i, fn in enumerate(stepwise):
+        carry, m = fn(carry, jax.tree.map(lambda x, j=i: x[j], batches),
+                      lrs[i])
+        _ = float(m["loss"])       # one readback per step
+jax.block_until_ready(carry)
+t_step = (time.perf_counter() - t0) / n * 1e6
+# per cycle the old loop pays B step launches plus the blocking metrics
+# round-trip that separates cycles: the issue's "B+1" host dispatches
+d_step = len(stepwise) + 1
+
+print(f"CSV daso_macro_cycle_compiled {t_macro:.1f} "
+      f"host_dispatches_per_cycle={d_macro:.0f} (B={B})")
+print(f"CSV daso_macro_cycle_stepwise {t_step:.1f} "
+      f"host_dispatches_per_cycle=B+1={d_step} "
+      f"({len(stepwise)} step launches + blocking metrics round-trip)")
+print(f"CSV daso_macro_cycle_speedup {t_step / max(t_macro, 1e-9):.3f} "
+      f"host_dispatches_per_cycling_cycle: B+1={d_step} -> {d_macro:.0f}")
+"""
+
+
+def _run_sub(emit, script, fail_tag, *, devices=8):
     env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    if devices > 1:
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    r = subprocess.run([sys.executable, "-c", textwrap.dedent(_SCRIPT)],
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
                        capture_output=True, text=True, timeout=600, env=env)
     if r.returncode != 0:
-        emit("daso_step_microbench_FAILED", 0.0, r.stderr[-200:])
+        emit(fail_tag, 0.0, r.stderr[-200:])
         return
     for line in r.stdout.splitlines():
         if line.startswith("CSV "):
             _, name, us, derived = line.split(" ", 3)
             emit(name, float(us), derived)
+
+
+def emit_rows(emit):
+    _run_sub(emit, _SCRIPT, "daso_step_microbench_FAILED")
+    # single device: the virtual-node replica axis needs no mesh, and the
+    # host-dispatch overhead being measured is device-count independent
+    _run_sub(emit, _CYCLE_SCRIPT, "daso_macro_cycle_FAILED", devices=1)

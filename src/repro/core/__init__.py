@@ -12,3 +12,15 @@ from repro.core.daso import (  # noqa: F401
 )
 from repro.core.schedule import DasoController, Mode  # noqa: F401
 from repro.core.compression import compress_bf16_roundtrip  # noqa: F401
+# Compiled macro-cycle executor + strategy registry (one XLA dispatch per
+# controller cycle instead of one per step).
+from repro.core.executor import (  # noqa: F401
+    CyclePlan,
+    MacroCycleExecutor,
+    Strategy,
+    get_strategy,
+    list_strategies,
+    make_strategy,
+    register_strategy,
+    run_compiled_training,
+)

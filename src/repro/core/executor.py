@@ -1,0 +1,439 @@
+"""Compiled macro-cycle executor + unified strategy registry.
+
+The host-side driver used to dispatch one compiled step per training step, so
+a DASO cycle of B local batches plus the send/receive merge cost B+1 host
+dispatches (controller decision, batch staging, dispatch, metric fetch — per
+step). At small step times that host loop dominates wall-clock, the same
+granularity problem DS-Sync (arXiv 2007.03298) restructures synchronization
+around. This module fuses each controller macro-cycle into ONE compiled,
+buffer-donating program:
+
+  * the `DasoController` emits a *cycle plan* — the exact (mode, staleness)
+    sequence the per-step path would have run, cut at natural boundaries
+    (next send, phase change, plateau-window edge) so host-side feedback
+    (`observe_loss`) never needs to land mid-cycle;
+  * `MacroCycleExecutor` compiles one program per distinct cycle *shape*
+    (e.g. ``(send, receive@1, local, local)`` for B=4/W=1, or
+    ``(blocking,)*10`` for warm-up), caching compilations by shape. Inside a
+    program, homogeneous runs of the same variant execute under
+    ``jax.lax.scan`` over the stacked per-step batches, so the whole cycle is
+    a single XLA invocation with donated carry buffers;
+  * irregular tail cycles (a shape that would be compiled for a single use
+    at the end of training) fall back to the existing per-step path.
+
+Strategies (``sync`` / ``daso`` / ``local_sgd``) register here behind a
+common *plan -> compiled-program* interface: each provides its carry pytree,
+its per-(mode, staleness) step builder, and its cycle planner. The executor
+is strategy-agnostic; `core/simulator.py` reuses the same interface for the
+per-step reference path that the equivalence tests compare against
+(see tests/test_executor.py: macro path == step path, allclose at f32).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.daso import (DasoConfig, daso_train_step, dereplicate_params,
+                             replica_divergence, replicate_params,
+                             sync_train_step)
+from repro.core.schedule import DasoController, Mode
+from repro.optim.optimizers import Optimizer
+
+# A cycle shape is the static fingerprint of a macro-cycle: one
+# (mode, staleness) pair per step. Distinct shapes compile distinct programs.
+CycleShape = Tuple[Tuple[str, int], ...]
+
+
+@dataclass(frozen=True)
+class CyclePlan:
+    """A controller-emitted macro-cycle: `shape[i]` is the (mode, staleness)
+    of training step `start_step + i`."""
+    start_step: int
+    shape: CycleShape
+
+    def __len__(self) -> int:
+        return len(self.shape)
+
+
+# -- strategy registry --------------------------------------------------------
+
+_REGISTRY: Dict[str, type] = {}
+
+
+def register_strategy(name: str):
+    """Class decorator: register a Strategy subclass under `name`."""
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def get_strategy(name: str) -> type:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown strategy {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def list_strategies() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def make_strategy(name: str, loss_fn: Callable, optimizer: Optimizer,
+                  cfg: Optional[DasoConfig] = None, **kw) -> "Strategy":
+    return get_strategy(name)(loss_fn, optimizer, cfg, **kw)
+
+
+class Strategy:
+    """Common plan -> compiled-program interface.
+
+    A strategy owns (a) the carry pytree threaded through training, (b) a
+    builder for statically-specialized step functions
+    ``step(carry, batch, lr) -> (carry, metrics)``, and (c) a planner that
+    emits the next macro-cycle. Both executors (macro-cycle and per-step
+    reference) drive strategies only through this interface.
+    """
+    name = "?"
+
+    def __init__(self, loss_fn: Callable, optimizer: Optimizer,
+                 cfg: Optional[DasoConfig] = None, *,
+                 controller: Optional[DasoController] = None,
+                 n_micro: int = 1):
+        self.loss_fn = loss_fn
+        self.optimizer = optimizer
+        self.cfg = cfg
+        self.n_micro = n_micro
+        self.controller = controller or (DasoController(cfg) if cfg else None)
+        self._steps: Dict[Tuple[str, int], Callable] = {}
+
+    # -- carry lifecycle ---------------------------------------------------
+    def init_carry(self, params0):
+        raise NotImplementedError
+
+    def finalize_params(self, carry):
+        raise NotImplementedError
+
+    # -- step building (cached per static variant) -------------------------
+    def step_fn(self, mode: str, staleness: int) -> Callable:
+        key = (mode, staleness)
+        if key not in self._steps:
+            self._steps[key] = self.build_step(mode, staleness)
+        return self._steps[key]
+
+    def build_step(self, mode: str, staleness: int) -> Callable:
+        raise NotImplementedError
+
+    # -- scheduling --------------------------------------------------------
+    def plan_cycle(self, step: int, max_len: int) -> CyclePlan:
+        raise NotImplementedError
+
+    def next_mode(self, step: int) -> Tuple[str, int]:
+        """Per-step decision for the reference path. Must be consumed in
+        step order, exactly once per step, and must produce the same
+        sequence `plan_cycle` would emit."""
+        raise NotImplementedError
+
+    def observe(self, losses: List[float]) -> None:
+        """Feed per-step losses (in step order) back to the scheduler."""
+        if self.controller is not None:
+            for loss in losses:
+                self.controller.observe_loss(loss)
+
+    # -- reporting ---------------------------------------------------------
+    def sync_fraction(self) -> float:
+        return (self.controller.global_sync_fraction()
+                if self.controller is not None else 1.0)
+
+    def divergence(self, carry) -> Optional[float]:
+        return None
+
+
+@register_strategy("daso")
+class DasoStrategy(Strategy):
+    """Paper strategy: replica-axis carry (params, opt_state, inflight),
+    `DasoController`-planned cycles, step variants from core/daso.py."""
+
+    def __init__(self, loss_fn, optimizer, cfg, **kw):
+        assert cfg is not None, "daso strategy requires a DasoConfig"
+        super().__init__(loss_fn, optimizer, cfg, **kw)
+
+    def init_carry(self, params0):
+        params = replicate_params(params0, self.cfg.n_replicas)
+        opt_state = replicate_params(self.optimizer.init(params0),
+                                     self.cfg.n_replicas)
+        # warm buffer; a real copy (not an alias of params) so the executor
+        # can donate both leaves of the carry independently
+        inflight = jax.tree.map(jnp.array, params)
+        return (params, opt_state, inflight)
+
+    def finalize_params(self, carry):
+        return dereplicate_params(carry[0])
+
+    def build_step(self, mode, staleness):
+        raw = daso_train_step(self.loss_fn, self.optimizer, self.cfg,
+                              mode=mode, staleness=staleness,
+                              n_micro=self.n_micro)
+
+        def step(carry, batch, lr):
+            params, opt_state, inflight = carry
+            params, opt_state, inflight, m = raw(params, opt_state, inflight,
+                                                 batch, lr)
+            return (params, opt_state, inflight), m
+
+        return step
+
+    def plan_cycle(self, step, max_len):
+        return CyclePlan(step, self.controller.plan_cycle(step, max_len))
+
+    def next_mode(self, step):
+        return self.controller.mode_for_step(step)
+
+    def divergence(self, carry):
+        return float(replica_divergence(carry[0]))
+
+
+@register_strategy("sync")
+class SyncStrategy(Strategy):
+    """Horovod-analog baseline: flat data parallelism, no replica axis.
+    Every step is the same variant, so cycles are fixed-length chunks."""
+
+    default_cycle_len = 8
+
+    def init_carry(self, params0):
+        # copy: the executor donates the carry, and params0 belongs to the
+        # caller (who may reuse it for another run)
+        return (jax.tree.map(jnp.array, params0),
+                self.optimizer.init(params0))
+
+    def finalize_params(self, carry):
+        return carry[0]
+
+    def build_step(self, mode, staleness):
+        raw = sync_train_step(self.loss_fn, self.optimizer,
+                              n_micro=self.n_micro)
+
+        def step(carry, batch, lr):
+            params, opt_state = carry
+            params, opt_state, m = raw(params, opt_state, batch, lr)
+            return (params, opt_state), m
+
+        return step
+
+    def plan_cycle(self, step, max_len):
+        n = max(1, min(max_len, self.default_cycle_len))
+        return CyclePlan(step, (("sync", 1),) * n)
+
+    def next_mode(self, step):
+        return ("sync", 1)
+
+    def observe(self, losses):
+        pass
+
+    def sync_fraction(self):
+        return 1.0
+
+
+@register_strategy("local_sgd")
+class LocalSGDStrategy(DasoStrategy):
+    """Ablation: naive periodic parameter overwrite (hard_avg every b_max
+    steps), no Eq. (1) staleness weighting, no plateau schedule."""
+
+    def _mode_at(self, step: int) -> str:
+        return Mode.HARD_AVG if step % max(1, self.cfg.b_max) == 0 \
+            else Mode.LOCAL
+
+    def plan_cycle(self, step, max_len):
+        b = max(1, self.cfg.b_max)
+        shape = []
+        while len(shape) < max_len:
+            t = step + len(shape)
+            if shape and t % b == 0:
+                break  # next hard_avg starts the next cycle
+            shape.append(self.next_mode(t))
+        return CyclePlan(step, tuple(shape))
+
+    def next_mode(self, step):
+        mode = self._mode_at(step)
+        self.controller.history.append((step, mode, self.controller.b,
+                                        self.controller.w))
+        return (mode, 1)
+
+
+# -- the executor --------------------------------------------------------------
+
+@dataclass
+class ExecutorStats:
+    dispatches: int = 0        # host->device program invocations
+    steps: int = 0             # training steps covered by those dispatches
+    cycles: int = 0            # macro-cycles executed compiled
+    compiles: int = 0          # distinct cycle shapes compiled
+    fallback_steps: int = 0    # steps run on the per-step fallback path
+
+    def dispatches_per_step(self) -> float:
+        total = self.steps + self.fallback_steps
+        return self.dispatches / total if total else 0.0
+
+
+def _group_runs(shape: CycleShape) -> List[Tuple[str, int, int, int]]:
+    """Group consecutive identical (mode, staleness) pairs into
+    (mode, staleness, offset, length) runs."""
+    runs: List[Tuple[str, int, int, int]] = []
+    for i, (mode, stale) in enumerate(shape):
+        if runs and runs[-1][0] == mode and runs[-1][1] == stale:
+            mode_, stale_, off, k = runs[-1]
+            runs[-1] = (mode_, stale_, off, k + 1)
+        else:
+            runs.append((mode, stale, i, 1))
+    return runs
+
+
+class MacroCycleExecutor:
+    """Compiles controller-emitted cycle plans into single XLA programs.
+
+    One compilation per distinct `CycleShape`, cached in `_programs`.
+    Homogeneous runs inside a shape execute under `jax.lax.scan`; the carry
+    (params / opt state / inflight buffer) is donated so XLA reuses the
+    parameter buffers in place across the whole cycle.
+    """
+
+    def __init__(self, strategy: Strategy, *, max_cycle_len: int = 32,
+                 donate: bool = True, tail_fallback: bool = True):
+        self.strategy = strategy
+        self.max_cycle_len = max_cycle_len
+        self.donate = donate
+        self.tail_fallback = tail_fallback
+        self.stats = ExecutorStats()
+        self._programs: Dict[CycleShape, Callable] = {}
+        self._per_step: Dict[Tuple[str, int], Callable] = {}
+
+    # -- compilation -------------------------------------------------------
+    @property
+    def cached_shapes(self) -> List[CycleShape]:
+        return list(self._programs)
+
+    def program_for(self, shape: CycleShape) -> Callable:
+        if shape not in self._programs:
+            self._programs[shape] = self._build_program(shape)
+            self.stats.compiles += 1
+        return self._programs[shape]
+
+    def _build_program(self, shape: CycleShape) -> Callable:
+        runs = _group_runs(shape)
+
+        def program(carry, batches, lrs):
+            chunks = []
+            for mode, stale, off, k in runs:
+                fn = self.strategy.step_fn(mode, stale)
+                if k == 1:
+                    batch = jax.tree.map(lambda x, i=off: x[i], batches)
+                    carry, m = fn(carry, batch, lrs[off])
+                    chunks.append(jax.tree.map(lambda x: x[None], m))
+                else:
+                    part = jax.tree.map(
+                        lambda x, i=off, n=k: x[i:i + n], batches)
+
+                    def body(c, xs, fn=fn):
+                        batch, lr = xs
+                        return fn(c, batch, lr)
+
+                    carry, ms = jax.lax.scan(body, carry,
+                                             (part, lrs[off:off + k]))
+                    chunks.append(ms)
+            metrics = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *chunks)
+            return carry, metrics
+
+        donate = (0,) if self.donate else ()
+        return jax.jit(program, donate_argnums=donate)
+
+    def _per_step_fn(self, mode: str, stale: int) -> Callable:
+        key = (mode, stale)
+        if key not in self._per_step:
+            self._per_step[key] = jax.jit(self.strategy.step_fn(mode, stale))
+        return self._per_step[key]
+
+    # -- execution ---------------------------------------------------------
+    def run_cycle(self, carry, plan: CyclePlan, batches, lrs, *,
+                  is_tail: bool = False):
+        """Execute one macro-cycle. `batches`/`lrs` carry a leading axis of
+        length len(plan). Returns (carry, stacked per-step metrics)."""
+        shape = plan.shape
+        if (self.tail_fallback and is_tail and len(shape) > 1
+                and shape not in self._programs):
+            return self._run_per_step(carry, shape, batches, lrs)
+        program = self.program_for(shape)
+        carry, metrics = program(carry, batches, lrs)
+        self.stats.dispatches += 1
+        self.stats.steps += len(shape)
+        self.stats.cycles += 1
+        return carry, metrics
+
+    def _run_per_step(self, carry, shape: CycleShape, batches, lrs):
+        """Irregular-tail fallback: the old one-dispatch-per-step path, so a
+        shape used exactly once never pays a fresh compilation."""
+        chunks = []
+        for i, (mode, stale) in enumerate(shape):
+            fn = self._per_step_fn(mode, stale)
+            batch = jax.tree.map(lambda x, j=i: x[j], batches)
+            carry, m = fn(carry, batch, lrs[i])
+            chunks.append(jax.tree.map(lambda x: x[None], m))
+            self.stats.dispatches += 1
+            self.stats.fallback_steps += 1
+        metrics = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *chunks)
+        return carry, metrics
+
+
+def run_compiled_training(strategy: Strategy, params0, data_fn: Callable,
+                          lr_fn: Callable, n_steps: int, *,
+                          executor: Optional[MacroCycleExecutor] = None,
+                          track_divergence: bool = False):
+    """Macro-cycle counterpart of `simulator.run_per_step_training`: plans
+    cycles from the strategy's controller, stacks the per-step batches, and
+    dispatches one compiled program per cycle. Numerically equivalent to the
+    per-step path (allclose at f32; tests/test_executor.py).
+
+    With `track_divergence` the replica divergence is sampled once per cycle
+    (the per-step path samples every step) — it is a host-side diagnostic
+    that would otherwise force a per-step sync point.
+    """
+    from repro.core.simulator import SimResult
+
+    ex = executor or MacroCycleExecutor(strategy)
+    carry = strategy.init_carry(params0)
+    losses: List[float] = []
+    metrics_log: List[Dict[str, float]] = []
+    divs: List[float] = []
+    step = 0
+    while step < n_steps:
+        plan = strategy.plan_cycle(step, min(ex.max_cycle_len,
+                                             n_steps - step))
+        steps = range(step, step + len(plan))
+        per_step = [data_fn(t) for t in steps]
+        batches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_step)
+        lrs = jnp.asarray([lr_fn(t) for t in steps], jnp.float32)
+        carry, metrics = ex.run_cycle(
+            carry, plan, batches, lrs,
+            is_tail=step + len(plan) >= n_steps)
+        host = {k: np.asarray(v) for k, v in metrics.items()}
+        cycle_losses = [float(host["loss"][j]) for j in range(len(plan))]
+        losses.extend(cycle_losses)
+        for j in range(len(plan)):
+            metrics_log.append({k: float(v[j]) for k, v in host.items()
+                                if v.ndim == 1})
+        strategy.observe(cycle_losses)
+        if track_divergence:
+            d = strategy.divergence(carry)
+            if d is not None:
+                divs.extend([d] * len(plan))
+        step += len(plan)
+    return SimResult(losses=losses, metrics=metrics_log,
+                     params=strategy.finalize_params(carry),
+                     sync_fraction=strategy.sync_fraction(),
+                     controller=strategy.controller, divergence=divs,
+                     executor_stats=ex.stats)

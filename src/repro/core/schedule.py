@@ -53,6 +53,10 @@ class DasoController:
 
     # -- phase logic -------------------------------------------------------
     def phase(self, step: int) -> str:
+        """Pure phase lookup for `step`: "warmup" for the first
+        `warmup_steps`, "cooldown" for the last `cooldown_steps` (when
+        `total_steps` is known), "cycling" otherwise. Does not mutate
+        controller state, so it is safe to call while planning ahead."""
         if step < self.cfg.warmup_steps:
             return "warmup"
         if (self.cfg.total_steps and self.cfg.cooldown_steps
@@ -62,14 +66,23 @@ class DasoController:
 
     @property
     def b(self) -> int:
+        """Current B: batches between global sends (paper's selective knob,
+        halved on plateau, reset when B == W == 1 plateaus again)."""
         return self._b
 
     @property
     def w(self) -> int:
+        """Current W: batches to wait before merging an in-flight exchange
+        (starts at max(1, B // 4), tracks B through halving/reset)."""
         return self._w
 
     def mode_for_step(self, step: int) -> Tuple[str, int]:
-        """Returns (mode, staleness_S). Call exactly once per step, in order."""
+        """Consume one scheduling decision: returns (mode, staleness_S) for
+        `step` and advances the send/receive bookkeeping. Call exactly once
+        per step, in step order — out-of-order calls corrupt the in-flight
+        exchange tracking. `staleness_S` is the number of batches actually
+        waited since the matching send (only meaningful for receive modes;
+        it feeds Eq. (1) as S)."""
         ph = self.phase(step)
         if ph in ("warmup", "cooldown"):
             # a blocking step completes any dangling exchange trivially
@@ -97,8 +110,56 @@ class DasoController:
         self.history.append((step, mode, self._b, self._w))
         return mode, stale
 
+    # -- macro-cycle planning ----------------------------------------------
+    def window_remaining(self) -> int:
+        """Steps until the current plateau-detection window fills. A planned
+        macro-cycle must not cross this boundary: `observe_loss` may halve or
+        reset B/W exactly when the window fills, and the per-step path would
+        see that change on the *next* step's decision."""
+        return self.loss_window - len(self._win_acc)
+
+    def _would_send(self, step: int) -> bool:
+        """Pure peek: would `mode_for_step(step)` start a new global send
+        given current state? Mirrors the send predicate in `mode_for_step`
+        (B-spacing satisfied and no exchange already in flight) without
+        consuming the step."""
+        if self.phase(step) != "cycling":
+            return False
+        return (step - self._last_send >= self._b
+                and self._inflight_since is None)
+
+    def plan_cycle(self, start_step: int,
+                   max_len: int = 32) -> Tuple[Tuple[str, int], ...]:
+        """Emit one macro-cycle starting at `start_step`: the exact
+        (mode, staleness) sequence `mode_for_step` would produce, consumed
+        from the schedule in order (history is recorded normally).
+
+        The cycle is cut at the first of: `max_len` steps, the plateau
+        window filling (`window_remaining`), a phase change, or the next
+        send in the cycling phase — so a B=4/W=1 cycling cycle is
+        ``(send, receive@S, local, local)`` and a warm-up cycle is a run of
+        ``blocking``. Cutting at these boundaries is what makes executing
+        the whole cycle as one compiled program equivalent to the per-step
+        path: no host-side feedback can change the schedule mid-cycle."""
+        n_max = max(1, min(max_len, self.window_remaining()))
+        phase0 = self.phase(start_step)
+        shape = []
+        while len(shape) < n_max:
+            t = start_step + len(shape)
+            if shape:
+                if self.phase(t) != phase0:
+                    break
+                if phase0 == "cycling" and self._would_send(t):
+                    break
+            shape.append(self.mode_for_step(t))
+        return tuple(shape)
+
     # -- plateau-driven B/W schedule ----------------------------------------
     def observe_loss(self, loss: float) -> None:
+        """Feed one training loss (in step order). Losses accumulate into
+        windows of `loss_window`; when a window fills, its mean is compared
+        against the best window so far and `plateau_patience` stale windows
+        trigger the paper's halve-or-reset rule on B and W."""
         self._win_acc.append(float(loss))
         if len(self._win_acc) < self.loss_window:
             return

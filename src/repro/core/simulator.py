@@ -2,6 +2,14 @@
 production mesh, with N virtual nodes realized as the leading replica axis on
 one device. Used for the paper's convergence claims (accuracy parity vs sync,
 degradation at large node counts / large B) without cluster hardware.
+
+Since the macro-cycle executor landed (core/executor.py) this module is the
+*per-step reference path*: one host dispatch per training step, modes decided
+step-by-step by the strategy. The compiled path must match it allclose at f32
+(tests/test_executor.py). (The executor's irregular-tail fallback uses the
+same one-dispatch-per-step scheme but lives in MacroCycleExecutor, driven by
+an already-planned shape.) Both paths drive strategies through the same
+registry interface.
 """
 from __future__ import annotations
 
@@ -11,9 +19,7 @@ from typing import Callable, Dict, List, Optional
 import jax
 import numpy as np
 
-from repro.core.daso import (DasoConfig, daso_train_step, dereplicate_params,
-                             replica_divergence, replicate_params,
-                             sync_train_step)
+from repro.core.daso import DasoConfig
 from repro.core.schedule import DasoController
 from repro.optim.optimizers import Optimizer
 
@@ -26,6 +32,9 @@ class SimResult:
     sync_fraction: float
     controller: Optional[DasoController] = None
     divergence: List[float] = field(default_factory=list)
+    # populated by the macro-cycle path (core/executor.py): dispatch /
+    # compile counters proving the B+1 -> 1 host-dispatch reduction
+    executor_stats: Optional[object] = None
 
     @property
     def final_loss(self) -> float:
@@ -33,50 +42,71 @@ class SimResult:
         return float(np.mean(self.losses[-k:]))
 
 
-def run_daso_training(loss_fn: Callable, optimizer: Optimizer, params0,
-                      data_fn: Callable, cfg: DasoConfig, lr_fn: Callable,
-                      n_steps: int, *, controller: Optional[DasoController]
-                      = None, track_divergence: bool = False,
-                      mode_override: Optional[str] = None) -> SimResult:
-    """data_fn(step) -> batch pytree with leading (R, per_replica_batch, ...)."""
-    controller = controller or DasoController(cfg)
-    params = replicate_params(params0, cfg.n_replicas)
-    opt_state = replicate_params(optimizer.init(params0), cfg.n_replicas)
-    inflight = jax.tree.map(lambda x: x, params)  # warm buffer
-
+def run_per_step_training(strategy, params0, data_fn: Callable,
+                          lr_fn: Callable, n_steps: int, *,
+                          track_divergence: bool = False) -> SimResult:
+    """Reference path: one jitted dispatch per training step, with the
+    strategy's per-step mode decision (`next_mode`) and loss feedback
+    (`observe`) interleaved exactly as on the original host loop.
+    `strategy` is any registered Strategy (core/executor.py)."""
+    carry = strategy.init_carry(params0)
     step_cache: Dict = {}
 
     def get_step(mode: str, staleness: int):
         key = (mode, staleness)
         if key not in step_cache:
-            step_cache[key] = jax.jit(daso_train_step(
-                loss_fn, optimizer, cfg, mode=mode, staleness=staleness))
+            step_cache[key] = jax.jit(strategy.step_fn(mode, staleness))
         return step_cache[key]
 
     losses, metrics_log, divs = [], [], []
     for step in range(n_steps):
-        if mode_override is not None:
-            mode = (mode_override(step) if callable(mode_override)
-                    else mode_override)
-            stale = 1
-            controller.history.append((step, mode, controller.b, controller.w))
-        else:
-            mode, stale = controller.mode_for_step(step)
+        mode, stale = strategy.next_mode(step)
         fn = get_step(mode, stale)
-        batch = data_fn(step)
-        params, opt_state, inflight, m = fn(params, opt_state, inflight,
-                                            batch, lr_fn(step))
+        carry, m = fn(carry, data_fn(step), lr_fn(step))
         loss = float(m["loss"])
         losses.append(loss)
         metrics_log.append({k: float(v) for k, v in m.items()
                             if getattr(v, "ndim", 1) == 0})
-        controller.observe_loss(loss)
+        strategy.observe([loss])
         if track_divergence:
-            divs.append(float(replica_divergence(params)))
+            d = strategy.divergence(carry)
+            if d is not None:
+                divs.append(d)
     return SimResult(losses=losses, metrics=metrics_log,
-                     params=dereplicate_params(params),
-                     sync_fraction=controller.global_sync_fraction(),
-                     controller=controller, divergence=divs)
+                     params=strategy.finalize_params(carry),
+                     sync_fraction=strategy.sync_fraction(),
+                     controller=strategy.controller, divergence=divs)
+
+
+# -- back-compat wrappers ------------------------------------------------------
+
+def run_daso_training(loss_fn: Callable, optimizer: Optimizer, params0,
+                      data_fn: Callable, cfg: DasoConfig, lr_fn: Callable,
+                      n_steps: int, *, controller: Optional[DasoController]
+                      = None, track_divergence: bool = False,
+                      mode_override: Optional[str] = None) -> SimResult:
+    """data_fn(step) -> batch pytree with leading (R, per_replica_batch, ...).
+
+    Thin wrapper over `run_per_step_training` with the `daso` strategy.
+    `mode_override` (str or step -> str) forces the schedule, e.g. the
+    local-SGD ablation; prefer the registered `local_sgd` strategy for
+    that."""
+    from repro.core.executor import DasoStrategy
+
+    strategy = DasoStrategy(loss_fn, optimizer, cfg, controller=controller)
+    if mode_override is not None:
+        controller = strategy.controller
+
+        def next_mode(step):
+            mode = (mode_override(step) if callable(mode_override)
+                    else mode_override)
+            controller.history.append((step, mode, controller.b,
+                                       controller.w))
+            return mode, 1
+
+        strategy.next_mode = next_mode
+    return run_per_step_training(strategy, params0, data_fn, lr_fn, n_steps,
+                                 track_divergence=track_divergence)
 
 
 def run_sync_training(loss_fn: Callable, optimizer: Optimizer, params0,
@@ -84,14 +114,7 @@ def run_sync_training(loss_fn: Callable, optimizer: Optimizer, params0,
                       n_steps: int) -> SimResult:
     """Horovod-analog baseline: one parameter copy, global batch each step.
     data_fn(step) must return the *flat* global batch (no replica axis)."""
-    step_fn = jax.jit(sync_train_step(loss_fn, optimizer))
-    params, opt_state = params0, optimizer.init(params0)
-    losses, metrics_log = [], []
-    for step in range(n_steps):
-        params, opt_state, m = step_fn(params, opt_state, data_fn(step),
-                                       lr_fn(step))
-        losses.append(float(m["loss"]))
-        metrics_log.append({k: float(v) for k, v in m.items()
-                            if getattr(v, "ndim", 1) == 0})
-    return SimResult(losses=losses, metrics=metrics_log, params=params,
-                     sync_fraction=1.0)
+    from repro.core.executor import SyncStrategy
+
+    strategy = SyncStrategy(loss_fn, optimizer)
+    return run_per_step_training(strategy, params0, data_fn, lr_fn, n_steps)

@@ -68,6 +68,8 @@ def _record(lowered, compiled, t_lower, t_compile, mesh, extra):
     from repro.launch.hlo_stats import collective_stats
     mem = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+        ca = ca[0] if ca else {}
     rec = {
         "ok": True,
         "lower_s": round(t_lower, 2),

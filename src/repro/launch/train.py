@@ -4,8 +4,13 @@ On this container it runs REAL training of a reduced architecture with DASO
 (virtual nodes on one device) or sync; on a TPU cluster the same entry points
 drive the production mesh (the dry-run proves those shardings compile).
 
+Training drives through the strategy registry and the compiled macro-cycle
+executor (core/executor.py) by default: one buffer-donating XLA dispatch per
+controller cycle instead of one per step. `--executor per_step` selects the
+reference path (identical numerics, allclose at f32).
+
   python -m repro.launch.train --arch llama3.2-1b --strategy daso \
-      --steps 300 --nodes 4 --b-max 4 [--full]
+      --steps 300 --nodes 4 --b-max 4 [--executor macro|per_step] [--full]
 """
 import argparse
 import json
@@ -14,6 +19,7 @@ import os
 import jax
 
 from repro.configs import get_config, get_reduced
+from repro.core.executor import list_strategies
 from repro.data.synthetic import SyntheticLM
 from repro.models.lm import init_params
 from repro.train.loop import TrainLoopConfig, run_training
@@ -26,7 +32,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--strategy", default="daso",
-                    choices=["daso", "sync", "local_sgd"])
+                    choices=list_strategies())
+    ap.add_argument("--executor", default="macro",
+                    choices=["macro", "per_step"],
+                    help="macro = one compiled dispatch per controller "
+                         "cycle; per_step = reference path")
+    ap.add_argument("--max-cycle-len", type=int, default=32)
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--nodes", type=int, default=4,
                     help="DASO replicas (paper nodes / pods)")
@@ -58,12 +69,18 @@ def main():
 
     loop_cfg = TrainLoopConfig(
         strategy=args.strategy, n_steps=args.steps, n_replicas=R,
-        local_world=args.local_world, b_max=args.b_max, lr=args.lr)
+        local_world=args.local_world, b_max=args.b_max, lr=args.lr,
+        executor=args.executor, max_cycle_len=args.max_cycle_len)
     lr_fn = warmup_linear_scaled(args.lr / (R * args.local_world),
                                  R * args.local_world,
                                  max(1, args.steps // 10))
     data_fn = sync_data if args.strategy == "sync" else daso_data
     result = run_training(loss_fn, params0, data_fn, loop_cfg, lr_fn=lr_fn)
+    if result.executor_stats is not None:
+        s = result.executor_stats
+        print(f"[train] executor: {s.dispatches} host dispatches for "
+              f"{args.steps} steps ({s.compiles} compiled cycle shapes, "
+              f"{s.fallback_steps} tail-fallback steps)")
 
     if args.ckpt:
         save_checkpoint(args.ckpt, result.params, step=args.steps)

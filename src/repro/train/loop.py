@@ -1,25 +1,33 @@
-"""End-to-end training driver: strategy selection (sync / daso / local_sgd),
-LR scheduling, metrics, checkpointing. Used by launch/train.py, the examples,
-and the convergence benchmarks."""
+"""End-to-end training driver: strategy selection via the registry
+(sync / daso / local_sgd), LR scheduling, metrics, checkpointing. Used by
+launch/train.py, the examples, and the convergence benchmarks.
+
+Two execution paths, numerically equivalent (allclose at f32):
+
+  * ``executor="macro"`` (default) — the compiled macro-cycle path
+    (core/executor.py): one buffer-donating XLA dispatch per controller
+    cycle instead of one per step.
+  * ``executor="per_step"`` — the reference path (core/simulator.py): one
+    dispatch per step, useful for debugging and as the equivalence oracle.
+"""
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
-import jax
-
 from repro.core.daso import DasoConfig
-from repro.core.schedule import DasoController, Mode
-from repro.core.simulator import (SimResult, run_daso_training,
-                                  run_sync_training)
+from repro.core.executor import (MacroCycleExecutor, list_strategies,
+                                 make_strategy, run_compiled_training)
+from repro.core.schedule import DasoController
+from repro.core.simulator import SimResult, run_per_step_training
 from repro.optim.optimizers import Optimizer, sgd
 from repro.optim.schedules import constant_lr
 
 
 @dataclass
 class TrainLoopConfig:
-    strategy: str = "daso"            # daso | sync | local_sgd
+    strategy: str = "daso"            # any registered name: daso|sync|local_sgd
     n_steps: int = 200
     n_replicas: int = 4               # paper "nodes"
     local_world: int = 4              # paper GPUs-per-node (data-axis size)
@@ -29,6 +37,29 @@ class TrainLoopConfig:
     lr: float = 0.05
     loss_window: int = 20
     log_every: int = 50
+    executor: str = "macro"           # macro | per_step
+    max_cycle_len: int = 32           # cap on compiled macro-cycle length
+
+
+def build_strategy(loss_fn: Callable, cfg: TrainLoopConfig,
+                   optimizer: Optimizer):
+    """Resolve cfg.strategy through the registry into a Strategy instance
+    (with its DasoConfig + controller for the replica-axis strategies)."""
+    if cfg.strategy not in list_strategies():
+        raise KeyError(f"unknown strategy {cfg.strategy!r}; "
+                       f"registered: {list_strategies()}")
+    if cfg.strategy == "sync":
+        return make_strategy("sync", loss_fn, optimizer)
+    dcfg = DasoConfig(
+        n_replicas=cfg.n_replicas,
+        global_world=cfg.n_replicas * cfg.local_world,
+        b_max=cfg.b_max,
+        warmup_steps=int(cfg.warmup_frac * cfg.n_steps),
+        cooldown_steps=int(cfg.cooldown_frac * cfg.n_steps),
+        total_steps=cfg.n_steps)
+    controller = DasoController(dcfg, loss_window=cfg.loss_window)
+    return make_strategy(cfg.strategy, loss_fn, optimizer, dcfg,
+                         controller=controller)
 
 
 def run_training(loss_fn: Callable, params0, data_fn: Callable,
@@ -39,28 +70,25 @@ def run_training(loss_fn: Callable, params0, data_fn: Callable,
     carry the leading replica axis; for sync it is flat."""
     optimizer = optimizer or sgd(momentum=0.9, weight_decay=1e-4)
     lr_fn = lr_fn or constant_lr(cfg.lr)
+    if cfg.executor not in ("macro", "per_step"):
+        raise ValueError(f"unknown executor {cfg.executor!r}; "
+                         "expected 'macro' or 'per_step'")
+    strategy = build_strategy(loss_fn, cfg, optimizer)
     t0 = time.time()
-    if cfg.strategy == "sync":
-        result = run_sync_training(loss_fn, optimizer, params0, data_fn,
-                                   lr_fn, cfg.n_steps)
+    if cfg.executor == "per_step":
+        result = run_per_step_training(strategy, params0, data_fn, lr_fn,
+                                       cfg.n_steps)
     else:
-        dcfg = DasoConfig(
-            n_replicas=cfg.n_replicas,
-            global_world=cfg.n_replicas * cfg.local_world,
-            b_max=cfg.b_max,
-            warmup_steps=int(cfg.warmup_frac * cfg.n_steps),
-            cooldown_steps=int(cfg.cooldown_frac * cfg.n_steps),
-            total_steps=cfg.n_steps)
-        controller = DasoController(dcfg, loss_window=cfg.loss_window)
-        local_sgd = (lambda step: Mode.HARD_AVG if step % cfg.b_max == 0
-                     else Mode.LOCAL)
-        result = run_daso_training(
-            loss_fn, optimizer, params0, data_fn, dcfg, lr_fn, cfg.n_steps,
-            controller=controller,
-            mode_override=local_sgd if cfg.strategy == "local_sgd" else None)
+        executor = MacroCycleExecutor(strategy,
+                                      max_cycle_len=cfg.max_cycle_len)
+        result = run_compiled_training(strategy, params0, data_fn, lr_fn,
+                                       cfg.n_steps, executor=executor)
     if log is not None:
         dt = time.time() - t0
+        stats = result.executor_stats
+        disp = (f" dispatches={stats.dispatches}/{cfg.n_steps}"
+                if stats is not None else "")
         log(f"[train] strategy={cfg.strategy} steps={cfg.n_steps} "
             f"final_loss={result.final_loss:.4f} "
-            f"sync_frac={result.sync_fraction:.3f} wall={dt:.1f}s")
+            f"sync_frac={result.sync_fraction:.3f} wall={dt:.1f}s{disp}")
     return result

@@ -1,35 +1,12 @@
 """End-to-end training-loop integration: strategies converge, the controller
 drives the schedule, checkpoint + restore reproduces the model."""
 import jax
-import jax.numpy as jnp
 import numpy as np
+from conftest import make_mlp_problem as _mlp_problem
 
 from repro.checkpoint.io import load_checkpoint, save_checkpoint
 from repro.core.schedule import Mode
-from repro.optim.optimizers import sgd
 from repro.train.loop import TrainLoopConfig, run_training
-
-
-def _mlp_problem(key, R=2, per=16, d=8):
-    w1 = jax.random.normal(key, (d, 16)) * 0.5
-    params0 = {"w1": jnp.zeros((d, 16)), "w2": jnp.zeros((16, 1))}
-
-    def loss_fn(params, batch):
-        h = jnp.tanh(batch["x"] @ params["w1"])
-        pred = h @ params["w2"]
-        return jnp.mean((pred - batch["y"]) ** 2), {}
-
-    def daso_data(step):
-        k = jax.random.fold_in(key, step)
-        x = jax.random.normal(k, (R, per, d))
-        y = jnp.tanh(x @ w1).sum(-1, keepdims=True) * 0.3
-        return {"x": x, "y": y}
-
-    def sync_data(step):
-        b = daso_data(step)
-        return {k2: v.reshape((-1,) + v.shape[2:]) for k2, v in b.items()}
-
-    return params0, loss_fn, daso_data, sync_data
 
 
 def test_all_strategies_learn():
