@@ -16,7 +16,22 @@ Horovod per-step cost:
 """
 from __future__ import annotations
 
+import os
+import sys
 from dataclasses import dataclass
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.compression import wire_itemsize  # noqa: E402
+
+
+def model_wire_bytes(param_bytes_fp32: float, wire_format: str, *,
+                     int8_block: int = 256) -> float:
+    """Wire bytes of one parameter transfer at `wire_format`, via the same
+    byte accounting the code path uses (repro.core.compression) instead of
+    ad-hoc /2 factors. Parameters are modelled as all-f32."""
+    n_params = param_bytes_fp32 / 4.0
+    return n_params * wire_itemsize(wire_format, int8_block=int8_block)
 
 
 @dataclass(frozen=True)
@@ -43,9 +58,9 @@ def ring_allreduce_s(nbytes: float, members: int, bw: float,
 
 
 def horovod_step_s(param_bytes_fp32: float, n_nodes: int,
-                   c: ClusterModel) -> float:
+                   c: ClusterModel, *, wire_format: str = "f16") -> float:
     w = n_nodes * c.gpus_per_node
-    nbytes = param_bytes_fp32 / 2.0  # fp16 compression
+    nbytes = model_wire_bytes(param_bytes_fp32, wire_format)
     # flat MPI ring over all W ranks: the node's IB link carries the ring
     # traffic of its 4 local members; W-rank latency term
     t_comm = ring_allreduce_s(nbytes * c.gpus_per_node, n_nodes,
@@ -58,13 +73,16 @@ def horovod_step_s(param_bytes_fp32: float, n_nodes: int,
 
 def daso_step_s(param_bytes_fp32: float, n_nodes: int, c: ClusterModel,
                 *, b: int = 4, blocking_frac: float = 0.2,
-                nonblocking_hidden: float = 0.8) -> float:
+                nonblocking_hidden: float = 0.8,
+                wire_format: str = "bf16") -> float:
     # every step: node-local gradient all-reduce over NVLink (NCCL)
     t_local = ring_allreduce_s(param_bytes_fp32, c.gpus_per_node,
                                c.nvlink_bw, latency=3e-6)
-    # global: bf16 params over the group (ONE GPU per node -> 1/4 traffic),
-    # every B steps, non-blocking (mostly hidden behind compute)
-    t_global = ring_allreduce_s(param_bytes_fp32 / 2.0, n_nodes,
+    # global: the fused parameter arena at `wire_format` over the group
+    # (ONE GPU per node -> 1/4 traffic), every B steps, non-blocking
+    # (mostly hidden behind compute)
+    t_global = ring_allreduce_s(model_wire_bytes(param_bytes_fp32,
+                                                 wire_format), n_nodes,
                                 c.ib_bw * c.ib_eff,
                                 latency=c.step_latency_s)
     # warm-up/cool-down fraction runs blocking (no overlap), cycling overlaps

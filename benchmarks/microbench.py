@@ -135,11 +135,120 @@ print(f"CSV daso_macro_cycle_speedup {t_step / max(t_macro, 1e-9):.3f} "
 """
 
 
-def _run_sub(emit, script, fail_tag, *, devices=8):
+_EXCHANGE_SCRIPT = """
+import json
+import os
+import time
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.daso import (replica_mean, replica_mean_per_leaf,
+                             replicate_params)
+from repro.core.compression import transfer_bytes
+from repro.launch.hlo_stats import collective_stats
+
+QUICK = os.environ.get("BENCH_QUICK") == "1"
+OUT = os.environ.get("BENCH_EXCHANGE_OUT", "BENCH_exchange.json")
+
+# A transformer-ish pytree: many leaves of mixed sizes (16 blocks x 7
+# leaves -> 112 leaves, ~525k params). The per-leaf path pays one
+# cross-replica all-reduce + wire cast per leaf; the fused arena path
+# pays exactly one, whatever this count is.
+R = 2
+n_blocks = 8 if QUICK else 16
+dims = (32, 64) if QUICK else (64, 128)
+key = jax.random.PRNGKey(0)
+tree = {}
+for l in range(n_blocks):
+    k = jax.random.fold_in(key, l)
+    d, f = dims
+    tree[f"layer{l}"] = {
+        "wq": jax.random.normal(jax.random.fold_in(k, 0), (d, d)),
+        "wk": jax.random.normal(jax.random.fold_in(k, 1), (d, d)),
+        "wv": jax.random.normal(jax.random.fold_in(k, 2), (d, d)),
+        "wo": jax.random.normal(jax.random.fold_in(k, 3), (d, d)),
+        "w_up": jax.random.normal(jax.random.fold_in(k, 4), (d, f)),
+        "w_down": jax.random.normal(jax.random.fold_in(k, 5), (f, d)),
+        "scale": jax.random.normal(jax.random.fold_in(k, 6), (d,)),
+    }
+n_leaves = len(jax.tree.leaves(tree))
+n_params = sum(x.size for x in jax.tree.leaves(tree))
+
+mesh = jax.make_mesh((2,), ("pod",))
+mesh_shape = {"pod": 2}
+sh = NamedSharding(mesh, P("pod"))
+params = jax.tree.map(lambda x: jax.device_put(x, sh),
+                      replicate_params(tree, R))
+params = jax.tree.map(
+    lambda x: x + jnp.arange(R, dtype=x.dtype).reshape(
+        (R,) + (1,) * (x.ndim - 1)), params)
+
+def bench(name, fn, *args, wire_format=None, impl=None):
+    jitted = jax.jit(fn)
+    out = jitted(*args)
+    jax.block_until_ready(out)
+    hlo = jitted.lower(*args).compile().as_text()
+    stats = collective_stats(hlo, mesh_shape)
+    ar = sum(v["count"] for k, v in stats.items()
+             if isinstance(v, dict) and k.startswith("all-reduce"))
+    n = 10 if QUICK else 30
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = jitted(*args)
+    jax.block_until_ready(out)
+    us = (time.perf_counter() - t0) / n * 1e6
+    rec = {"name": name, "impl": impl, "wire_format": wire_format,
+           "us_per_exchange": us, "all_reduce_ops": ar}
+    if wire_format:
+        rec["transfer_bytes"] = transfer_bytes(tree,
+                                               wire_format=wire_format)
+    results.append(rec)
+    print(f"CSV exchange_{name} {us:.1f} "
+          f"all_reduce_ops={ar} wire={wire_format} impl={impl}")
+    return us
+
+results = []
+for wf, wd in (("f32", None), ("bf16", jnp.bfloat16)):
+    bench(f"per_leaf_{wf}",
+          lambda p, wd=wd: replica_mean_per_leaf(p, wd), params,
+          wire_format=wf, impl="per_leaf")
+for wf in ("f32", "bf16", "int8"):
+    bench(f"fused_{wf}",
+          lambda p, wf=wf: replica_mean(p, wire_format=wf), params,
+          wire_format=wf, impl="fused")
+
+by = {r["name"]: r for r in results}
+tb = {r["wire_format"]: r["transfer_bytes"] for r in results
+      if r.get("transfer_bytes")}
+derived = {
+    "fused_speedup_f32": by["per_leaf_f32"]["us_per_exchange"]
+    / by["fused_f32"]["us_per_exchange"],
+    "fused_speedup_bf16": by["per_leaf_bf16"]["us_per_exchange"]
+    / by["fused_bf16"]["us_per_exchange"],
+    "all_reduce_ops_per_leaf": by["per_leaf_f32"]["all_reduce_ops"],
+    "all_reduce_ops_fused": by["fused_f32"]["all_reduce_ops"],
+    "int8_vs_bf16_bytes": tb["int8"] / tb["bf16"],
+}
+record = {"benchmark": "exchange",
+          "config": {"n_replicas": R, "n_leaves": n_leaves,
+                     "n_params": int(n_params), "quick": QUICK,
+                     "mesh": "pod=2"},
+          "results": results, "derived": derived}
+with open(OUT, "w") as f:
+    json.dump(record, f, indent=2)
+print(f"CSV exchange_speedup_f32 {derived['fused_speedup_f32']:.3f} "
+      f"all_reduce_ops {by['per_leaf_f32']['all_reduce_ops']} -> "
+      f"{by['fused_f32']['all_reduce_ops']} (leaves={n_leaves})")
+print(f"CSV exchange_int8_vs_bf16_bytes "
+      f"{derived['int8_vs_bf16_bytes']:.3f} json={OUT}")
+"""
+
+
+def _run_sub(emit, script, fail_tag, *, devices=8, extra_env=None):
     env = dict(os.environ)
     if devices > 1:
         env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.update(extra_env or {})
     r = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
                        capture_output=True, text=True, timeout=600, env=env)
     if r.returncode != 0:
@@ -156,3 +265,11 @@ def emit_rows(emit):
     # single device: the virtual-node replica axis needs no mesh, and the
     # host-dispatch overhead being measured is device-count independent
     _run_sub(emit, _CYCLE_SCRIPT, "daso_macro_cycle_FAILED", devices=1)
+
+
+def emit_exchange_rows(emit, *, quick=False):
+    """Fused flat-buffer exchange vs the legacy per-leaf path, across wire
+    formats, on a 2-device (pod) mesh. Writes the perf record to
+    $BENCH_EXCHANGE_OUT (default ./BENCH_exchange.json)."""
+    _run_sub(emit, _EXCHANGE_SCRIPT, "exchange_microbench_FAILED",
+             devices=2, extra_env={"BENCH_QUICK": "1" if quick else "0"})

@@ -18,7 +18,8 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig6,fig7,fig8,fig9,micro,roofline")
+                    help="comma list: fig6,fig7,fig8,fig9,micro,exchange,"
+                         "roofline")
     ap.add_argument("--quick", action="store_true",
                     help="shorter convergence runs")
     args = ap.parse_args()
@@ -40,6 +41,8 @@ def main() -> None:
         figures.fig9_quality_parity(emit, n_steps=60 if args.quick else 150)
     if want("micro"):
         microbench.emit_rows(emit)
+    if want("exchange"):
+        microbench.emit_exchange_rows(emit, quick=args.quick)
     if want("roofline"):
         roofline.emit_rows(emit)
 

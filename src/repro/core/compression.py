@@ -1,14 +1,81 @@
-"""Transfer-buffer compression (paper §3: parameters are cast to a 16-bit
-datatype during buffer packaging for blocking global syncs; DASO uses
-bfloat16, Horovod fp16 — convergence unaffected per QSGD [19])."""
+"""Wire-format byte accounting + back-compat compression wrappers.
+
+The per-leaf compress/decompress pair that used to live here is retired:
+transfer packaging now runs over the fused flat-buffer arenas
+(`core/flatbuf.py` codecs, `kernels/comm_kernels.py` kernels). What remains
+is (a) the byte accounting the communication model and benchmarks share,
+and (b) thin wrappers that keep the old names working by delegating to the
+arena codecs.
+
+Paper §3: parameters are cast to a 16-bit datatype during buffer packaging
+for blocking global syncs (DASO bfloat16, Horovod fp16 — convergence
+unaffected per QSGD [19]). The beyond-paper int8 tier carries 1 byte per
+element plus one f32 scale per `int8_block` elements.
+"""
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import flatbuf
+
+#: bytes per floating element on the wire, excluding int8 scale overhead
+WIRE_ITEMSIZE = {"f32": 4.0, "bf16": 2.0, "f16": 2.0, "int8": 1.0}
+
+
+def wire_itemsize(wire_format: str, *, int8_block: int = 256) -> float:
+    """Effective bytes per floating element for `wire_format`, including
+    the per-block f32 scale overhead of the int8 tier."""
+    if wire_format not in WIRE_ITEMSIZE:
+        raise ValueError(f"unknown wire_format {wire_format!r}; expected "
+                         f"one of {sorted(WIRE_ITEMSIZE)}")
+    size = WIRE_ITEMSIZE[wire_format]
+    if wire_format == "int8":
+        size += 4.0 / int8_block
+    return size
+
+
+def transfer_bytes(tree, *, wire_format: str = "bf16",
+                   int8_block: int = 256) -> int:
+    """Wire bytes for one global exchange of `tree`.
+
+    Dtype-aware and arena-consistent: floating leaves are charged at the
+    wire format's itemsize, with int8 scale overhead counted the way the
+    fused codec actually quantizes — one block grid per packed dtype
+    arena (blocks span leaf boundaries inside an arena), ceil'd once per
+    arena. Non-floating leaves cross at their own dtype — they are never
+    cast by the exchange."""
+    if wire_format not in WIRE_ITEMSIZE:
+        raise ValueError(f"unknown wire_format {wire_format!r}; expected "
+                         f"one of {sorted(WIRE_ITEMSIZE)}")
+    total = 0.0
+    arena_elems: dict = {}
+    for x in jax.tree.leaves(tree):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            if wire_format == "int8":
+                key = jnp.dtype(x.dtype).name
+                arena_elems[key] = arena_elems.get(key, 0) + x.size
+            elif wire_format == "f32":
+                # the "f32" tier is identity: the arena crosses at its
+                # own dtype (a bf16 leaf still ships 2 bytes/elem)
+                total += x.size * jnp.dtype(x.dtype).itemsize
+            else:
+                total += x.size * wire_itemsize(wire_format)
+        else:
+            total += x.size * jnp.dtype(x.dtype).itemsize
+    for n in arena_elems.values():
+        total += n + 4 * (-(-n // int8_block))
+    return int(math.ceil(total))
+
+
+# -- back-compat wrappers over the arena codecs --------------------------------
 
 def compress_bf16(tree):
-    """Cast floating leaves to bf16 (what crosses the wire)."""
+    """Cast floating leaves to bf16 (what crosses the wire). Retained for
+    API compatibility; the exchange itself packs first and casts the whole
+    arena at once."""
     def leaf(x):
         if jnp.issubdtype(x.dtype, jnp.floating):
             return x.astype(jnp.bfloat16)
@@ -21,11 +88,6 @@ def decompress_to(tree, like):
 
 
 def compress_bf16_roundtrip(tree):
-    """Emulates pack(bf16) -> wire -> unpack(orig dtype)."""
-    return decompress_to(compress_bf16(tree), tree)
-
-
-def transfer_bytes(tree, *, bits: int = 16) -> int:
-    """Wire bytes for one global exchange of `tree` at the given precision."""
-    n = sum(x.size for x in jax.tree.leaves(tree))
-    return n * bits // 8
+    """Emulates pack(bf16) -> wire -> unpack(orig dtype), via the fused
+    arena codec (core/flatbuf.py)."""
+    return flatbuf.tree_wire_roundtrip(tree, "bf16")

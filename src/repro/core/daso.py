@@ -10,7 +10,12 @@ the replica axis is sharded over "pod", so:
     exactly the paper's node-local NCCL gradient averaging, every step.
   * global sync — any mean over the leading replica axis lowers to a cross-pod
     (DCN) all-reduce: exactly the paper's MPI group exchange. It appears in
-    the HLO only in the step variants that perform it.
+    the HLO only in the step variants that perform it. The exchange runs on
+    the fused flat-buffer arena (core/flatbuf.py): the parameter pytree is
+    packed into one contiguous buffer per dtype, so a global sync is ONE
+    cross-pod all-reduce regardless of leaf count (Horovod-style tensor
+    fusion), with the wire tier (f32 | bf16 | int8 block-scaled) applied to
+    the whole arena at once (kernels/comm_kernels.py).
 
 Step variants (selected by the host-side DasoController, mirroring the MPI
 process flow of paper Fig. 5; static per-variant compilation keeps each HLO's
@@ -34,7 +39,10 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import flatbuf
 from repro.optim.optimizers import Optimizer
+
+EXCHANGE_IMPLS = ("fused", "per_leaf")
 
 
 @dataclass(frozen=True)
@@ -53,6 +61,43 @@ class DasoConfig:
     compress_nonblocking: bool = False
     plateau_patience: int = 5
     plateau_threshold: float = 1e-3
+    # Wire format of the global exchange: None derives it from the
+    # compress_* flags per phase (bf16 or f32); "f32" | "bf16" | "int8"
+    # forces one tier for both phases. int8 is the beyond-paper
+    # block-scaled tier (QSGD-style, see core/flatbuf.py).
+    wire_format: Optional[str] = None
+    # "fused" = flat-buffer arena exchange (one cross-replica reduction per
+    # global sync regardless of leaf count); "per_leaf" = the legacy
+    # one-collective-per-leaf reference path (equivalence oracle).
+    exchange_impl: str = "fused"
+    # Route the arena's elementwise exchange math (Eq.(1) merge, wire
+    # casts, int8 codec) through the Pallas kernels in
+    # repro.kernels.comm_kernels instead of plain jnp. Default False: the
+    # jnp path lowers to HLO the SPMD partitioner can shard exactly, which
+    # the cross-pod traffic audit (tests/test_distributed.py) relies on;
+    # flip on for single-device arenas and compiled TPU kernels.
+    exchange_kernels: bool = False
+    int8_block: int = 256        # elements per int8 scale block
+
+    def __post_init__(self):
+        if self.wire_format is not None:
+            flatbuf._check_wire_format(self.wire_format)
+        if self.exchange_impl not in EXCHANGE_IMPLS:
+            raise ValueError(f"unknown exchange_impl "
+                             f"{self.exchange_impl!r}; "
+                             f"expected one of {EXCHANGE_IMPLS}")
+        if self.wire_format == "int8" and self.exchange_impl == "per_leaf":
+            raise ValueError("int8 wire format requires the fused arena "
+                             "exchange (exchange_impl='fused')")
+
+    def wire_format_for(self, *, blocking: bool) -> str:
+        """Resolve the wire tier of a global exchange: the explicit
+        `wire_format` if set, else bf16/f32 from the per-phase flag."""
+        if self.wire_format is not None:
+            return self.wire_format
+        flag = self.compress_blocking if blocking \
+            else self.compress_nonblocking
+        return "bf16" if flag else "f32"
 
 
 # -- replica-axis helpers ----------------------------------------------------
@@ -66,21 +111,100 @@ def dereplicate_params(params):
     return jax.tree.map(lambda p: p[0], params)
 
 
-def replica_mean(tree, wire_dtype=None):
-    """Mean over the leading replica axis, broadcast back. On the production
-    mesh this lowers to the cross-pod (DCN) all-reduce; `wire_dtype`
-    controls the dtype that crosses the wire (None = the leaf's own dtype,
-    jnp.bfloat16 = the paper's 16-bit transfer compression)."""
+def _wire_format_from(wire_dtype, wire_format) -> str:
+    """Back-compat shim: map the legacy `wire_dtype` argument (None /
+    jnp.bfloat16) onto the wire-format tiers."""
+    if wire_format is not None:
+        return flatbuf._check_wire_format(wire_format)
+    if wire_dtype is None:
+        return "f32"
+    if jnp.dtype(wire_dtype) == jnp.dtype(jnp.bfloat16):
+        return "bf16"
+    if jnp.dtype(wire_dtype) == jnp.dtype(jnp.float32):
+        return "f32"
+    raise ValueError(f"unsupported wire_dtype {wire_dtype!r}; use "
+                     f"wire_format={flatbuf.WIRE_FORMATS}")
+
+
+def _arena_mean(arena, wire_format: str, *, int8_block: int,
+                use_kernels: bool):
+    """Mean over the leading replica axis of one arena, kept as a (1, N)
+    buffer (the caller broadcasts per leaf after unpacking — one full-size
+    materialization instead of two). Exactly one axis-0 reduction per
+    arena — the op that lowers to the cross-pod (DCN) all-reduce on the
+    production mesh."""
+    r = arena.shape[0]
+    if not jnp.issubdtype(arena.dtype, jnp.floating):
+        # integer leaves cross the wire at their own dtype; the mean is
+        # computed in f32 and rounded back (an int-dtype reduce would
+        # truncate the 1/R scale to zero)
+        w = arena.astype(jnp.float32)
+        m = jax.lax.reduce(w, jnp.zeros((), jnp.float32), jax.lax.add, (0,))
+        return jnp.round(m * (1.0 / r))[None].astype(arena.dtype)
+    if wire_format == "int8":
+        # each replica quantizes its arena (int8 + per-block scales is what
+        # a real DCN transfer would carry); the mean runs over the
+        # dequantized values in f32. Round-to-nearest (no rng_key): the
+        # step variants are statically specialized and take no RNG, so the
+        # unbiased stochastic tier stays a codec/kernel-API option.
+        deq = flatbuf.wire_roundtrip(arena, "int8", int8_block=int8_block,
+                                     use_kernels=use_kernels)
+        m = jax.lax.reduce(deq, jnp.zeros((), jnp.float32),
+                           jax.lax.add, (0,))
+        return (m * (1.0 / r))[None].astype(arena.dtype)
+    # Pin the reduction computation dtype with lax.reduce: both jnp.mean
+    # and jnp.sum(dtype=...) silently upcast bf16 accumulation to f32,
+    # which puts f32 on the cross-pod wire (verified in HLO).
+    w = (flatbuf.encode_wire(arena, "bf16", use_kernels=use_kernels)
+         if wire_format == "bf16" else arena)
+    wd = w.dtype
+    m = jax.lax.reduce(w, jnp.zeros((), wd), jax.lax.add, (0,))
+    return ((m * jnp.asarray(1.0 / r, wd))[None]).astype(arena.dtype)
+
+
+def replica_mean_per_leaf(tree, wire_dtype=None):
+    """Legacy per-leaf exchange: one cross-pod all-reduce PER LEAF. Kept as
+    the equivalence oracle and microbenchmark baseline for the fused arena
+    path (`replica_mean`); f32/bf16 wire only."""
     def leaf(x):
         wd = jnp.dtype(wire_dtype or x.dtype)
-        # Pin the reduction computation dtype with lax.reduce: both jnp.mean
-        # and jnp.sum(dtype=...) silently upcast bf16 accumulation to f32,
-        # which puts f32 on the cross-pod wire (verified in HLO).
         w = x.astype(wd)
         m = jax.lax.reduce(w, jnp.zeros((), wd), jax.lax.add, (0,))
         m = (m * jnp.asarray(1.0 / x.shape[0], wd))[None]
         return jnp.broadcast_to(m, x.shape).astype(x.dtype)
     return jax.tree.map(leaf, tree)
+
+
+def replica_mean(tree, wire_dtype=None, *, wire_format=None,
+                 impl: str = "fused", int8_block: int = 256,
+                 use_kernels: bool = False):
+    """Mean over the leading replica axis, broadcast back.
+
+    Default path packs the pytree into one contiguous arena per dtype
+    (core/flatbuf.py) so the whole exchange is ONE cross-replica reduction
+    regardless of leaf count; `wire_format` ("f32" | "bf16" | "int8")
+    selects the transfer tier. `impl="per_leaf"` restores the legacy
+    one-collective-per-leaf reference path. `wire_dtype` is the legacy
+    spelling (None = uncompressed, jnp.bfloat16 = 16-bit packaging)."""
+    wf = _wire_format_from(wire_dtype, wire_format)
+    if impl == "per_leaf":
+        if wf == "int8":
+            raise ValueError("int8 wire format requires the fused arena "
+                             "exchange (impl='fused')")
+        return replica_mean_per_leaf(
+            tree, jnp.bfloat16 if wf == "bf16" else None)
+    layout = flatbuf.build_layout(tree, batch_dims=1)
+    arenas = flatbuf.pack(tree, layout)
+    out = {k: _arena_mean(a, wf, int8_block=int8_block,
+                          use_kernels=use_kernels)
+           for k, a in arenas.items()}
+    # unpack the (1, N) means, then broadcast per leaf: the broadcast fuses
+    # into each leaf's consumer instead of materializing a second full-size
+    # arena before slicing
+    mean_tree = flatbuf.unpack(out, layout)
+    r = layout.batch_shape[0]
+    return jax.tree.map(
+        lambda m: jnp.broadcast_to(m, (r,) + m.shape[1:]), mean_tree)
 
 
 def replica_divergence(params) -> jnp.ndarray:
@@ -94,18 +218,22 @@ def replica_divergence(params) -> jnp.ndarray:
 
 # -- DASO primitive operations ------------------------------------------------
 
-def global_send(params, *, compress: bool = False):
+def global_send(params, *, compress: bool = False, wire_format=None,
+                impl: str = "fused", int8_block: int = 256,
+                use_kernels: bool = False):
     """Snapshot + start global exchange: returns the in-flight buffer
-    (replica mean of current params, one copy per replica). compress=True
-    puts bf16 on the wire (beyond-paper for the non-blocking path, see
-    DasoConfig)."""
-    return replica_mean(params,
-                        wire_dtype=jnp.bfloat16 if compress else None)
+    (replica mean of current params, one copy per replica). The wire tier
+    comes from `wire_format` (or legacy compress=True -> bf16,
+    beyond-paper for the non-blocking path, see DasoConfig)."""
+    wf = wire_format or ("bf16" if compress else "f32")
+    return replica_mean(params, wire_format=wf, impl=impl,
+                        int8_block=int8_block, use_kernels=use_kernels)
 
 
-def global_receive(params, inflight, *, staleness: int, global_world: int):
-    """Paper Eq. (1): weighted merge of stale global average with current
-    local params. staleness S = batches waited; global_world P."""
+def global_receive_per_leaf(params, inflight, *, staleness: int,
+                            global_world: int):
+    """Legacy per-leaf Eq. (1) merge (one fused-multiply chain per leaf);
+    equivalence oracle for the fused arena merge."""
     s2 = jnp.asarray(2.0 * staleness, jnp.float32)
     p_ = jnp.asarray(float(global_world), jnp.float32)
     denom = s2 + p_
@@ -118,11 +246,47 @@ def global_receive(params, inflight, *, staleness: int, global_world: int):
     return jax.tree.map(leaf, params, inflight)
 
 
-def blocking_sync(params, *, compress: bool = True):
+def global_receive(params, inflight, *, staleness: int, global_world: int,
+                   impl: str = "fused", use_kernels: bool = False):
+    """Paper Eq. (1): weighted merge of stale global average with current
+    local params. staleness S = batches waited; global_world P.
+
+    The merge has no collective, so in jnp-land XLA already fuses the
+    leaf-wise multiply-add chains into one elementwise pass — packing an
+    arena would only add two copies. With `use_kernels=True` the merge
+    runs as ONE Pallas `eq1_merge` program over the packed arena (the
+    TPU-kernel tier, where a single contiguous launch is the point)."""
+    if impl == "per_leaf":
+        return global_receive_per_leaf(params, inflight,
+                                       staleness=staleness,
+                                       global_world=global_world)
+    from repro.kernels.ref import eq1_merge_ref
+    if not use_kernels:
+        return jax.tree.map(
+            lambda a, b: eq1_merge_ref(a, b, staleness=staleness,
+                                       global_world=global_world),
+            params, inflight)
+    from repro.kernels.ops import eq1_merge
+    layout = flatbuf.build_layout(params, batch_dims=1)
+    locals_ = flatbuf.pack(params, layout)
+    stales = flatbuf.pack(inflight, layout)
+    out = {k: (eq1_merge(a, stales[k], staleness=staleness,
+                         global_world=global_world)
+               if jnp.issubdtype(a.dtype, jnp.floating) else
+               eq1_merge_ref(a, stales[k], staleness=staleness,
+                             global_world=global_world))
+           for k, a in locals_.items()}
+    return flatbuf.unpack(out, layout)
+
+
+def blocking_sync(params, *, compress: bool = True, wire_format=None,
+                  impl: str = "fused", int8_block: int = 256,
+                  use_kernels: bool = False):
     """Synchronous global average (warm-up / cool-down), with the paper's
-    16-bit transfer compression."""
-    return replica_mean(params,
-                        wire_dtype=jnp.bfloat16 if compress else None)
+    16-bit transfer compression (or the tier in `wire_format`)."""
+    wf = wire_format or ("bf16" if compress else "f32")
+    return replica_mean(params, wire_format=wf, impl=impl,
+                        int8_block=int8_block, use_kernels=use_kernels)
 
 
 # -- assembled train step ------------------------------------------------------
@@ -200,19 +364,26 @@ def daso_train_step(loss_fn: Callable, optimizer: Optimizer, cfg: DasoConfig,
     lstep = local_step(loss_fn, optimizer, spmd_axis_name=spmd_axis_name,
                        n_micro=n_micro)
 
+    impl, kern, blk = (cfg.exchange_impl, cfg.exchange_kernels,
+                       cfg.int8_block)
+
     def step(params, opt_state, inflight, batch, lr):
         if mode in ("receive", "send_receive"):
             params = global_receive(params, inflight,
                                     staleness=staleness,
-                                    global_world=cfg.global_world)
+                                    global_world=cfg.global_world,
+                                    impl=impl, use_kernels=kern)
         params, opt_state, loss_r, aux_r = lstep(params, opt_state, batch, lr)
         if mode in ("send", "send_receive"):
-            inflight = global_send(params,
-                                   compress=cfg.compress_nonblocking)
+            inflight = global_send(
+                params, wire_format=cfg.wire_format_for(blocking=False),
+                impl=impl, int8_block=blk, use_kernels=kern)
         elif mode == "blocking":
-            params = blocking_sync(params, compress=cfg.compress_blocking)
+            params = blocking_sync(
+                params, wire_format=cfg.wire_format_for(blocking=True),
+                impl=impl, int8_block=blk, use_kernels=kern)
         elif mode == "hard_avg":
-            params = replica_mean(params)
+            params = replica_mean(params, impl=impl)
         metrics = {"loss": jnp.mean(loss_r), "loss_per_replica": loss_r}
         for k, v in aux_r.items():
             if isinstance(v, jnp.ndarray) and v.ndim <= 1:

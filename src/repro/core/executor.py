@@ -157,7 +157,14 @@ class Strategy:
 @register_strategy("daso")
 class DasoStrategy(Strategy):
     """Paper strategy: replica-axis carry (params, opt_state, inflight),
-    `DasoController`-planned cycles, step variants from core/daso.py."""
+    `DasoController`-planned cycles, step variants from core/daso.py.
+
+    The DasoConfig carries the fused-exchange knobs (`wire_format`,
+    `exchange_impl`, `int8_block`, `exchange_kernels`): every step variant
+    this strategy builds runs its global exchange over the flat-buffer
+    arena (one cross-replica collective per sync regardless of leaf
+    count), so each compiled macro-cycle contains exactly one fused
+    exchange program per sync step in its shape."""
 
     def __init__(self, loss_fn, optimizer, cfg, **kw):
         assert cfg is not None, "daso strategy requires a DasoConfig"

@@ -1,0 +1,163 @@
+"""Pallas kernels for the fused flat-buffer global exchange (core/flatbuf.py).
+
+The exchange hot path operates on one contiguous arena per dtype instead of
+per parameter leaf; these kernels fuse the elementwise exchange math over
+that arena:
+
+  * `eq1_merge`       — paper Eq. (1): (2S*x_local + P*x_stale) / (2S + P),
+                        f32 accumulation, output in the arena dtype;
+  * `bf16_pack` /
+    `bf16_unpack`     — the paper's 16-bit transfer packaging over the
+                        arena (one cast kernel instead of one per leaf);
+  * `quantize_int8` /
+    `dequantize_int8` — beyond-paper int8 tier: per-block absmax scales
+                        (QSGD-style), optional stochastic rounding from
+                        caller-supplied uint32 bits.
+
+All kernels view the arena as rows of `block` contiguous elements: the
+`repro.kernels.ops` wrappers flatten, pad the trailing axis to a block
+multiple, and run a (rows, blocks) grid. Blocks never span the leading
+batch (replica) axis, so int8 scales are always per-replica. On this CPU
+container they run with interpret=True; on TPU set interpret=False and
+size `block` to the dtype tile (int8 wants multiples of 32*128).
+
+Random bits for stochastic rounding are passed in as a uint32 arena
+(generated with jax.random.bits) rather than drawn via pltpu.prng_* so the
+same kernel body runs under plain interpret mode; a TPU deployment can
+swap in the on-core PRNG without changing the contract.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import INT8_SCALE_FLOOR
+
+
+def _row_specs(block: int):
+    """One (block,)-row of the (rows, block) arena view per grid cell."""
+    return pl.BlockSpec((None, block), lambda i: (i, 0))
+
+
+# -- Eq. (1) merge -------------------------------------------------------------
+
+def _eq1_kernel(local_ref, stale_ref, out_ref, *, s2, p):
+    inv = 1.0 / (s2 + p)
+    x = local_ref[...].astype(jnp.float32)
+    y = stale_ref[...].astype(jnp.float32)
+    out_ref[...] = ((s2 * x + p * y) * inv).astype(out_ref.dtype)
+
+
+def eq1_merge(local, stale, *, staleness: int, global_world: int,
+              block: int = 1024, interpret: bool = False):
+    """local, stale: (rows, block) arena views, same shape/dtype.
+    Returns the Eq. (1) merge in local's dtype."""
+    rows, bk = local.shape
+    assert bk == block, (local.shape, block)
+    kernel = functools.partial(_eq1_kernel, s2=2.0 * staleness,
+                               p=float(global_world))
+    return pl.pallas_call(
+        kernel,
+        grid=(rows,),
+        in_specs=[_row_specs(block), _row_specs(block)],
+        out_specs=_row_specs(block),
+        out_shape=jax.ShapeDtypeStruct((rows, block), local.dtype),
+        interpret=interpret,
+    )(local, stale)
+
+
+# -- bf16 wire packaging -------------------------------------------------------
+
+def _cast_kernel(x_ref, out_ref):
+    out_ref[...] = x_ref[...].astype(out_ref.dtype)
+
+
+def bf16_pack(x, *, block: int = 1024, interpret: bool = False):
+    """(rows, block) floating arena view -> bf16 wire buffer."""
+    rows, bk = x.shape
+    assert bk == block, (x.shape, block)
+    return pl.pallas_call(
+        _cast_kernel,
+        grid=(rows,),
+        in_specs=[_row_specs(block)],
+        out_specs=_row_specs(block),
+        out_shape=jax.ShapeDtypeStruct((rows, block), jnp.bfloat16),
+        interpret=interpret,
+    )(x)
+
+
+def bf16_unpack(x, *, out_dtype=jnp.float32, block: int = 1024,
+                interpret: bool = False):
+    """bf16 wire buffer -> (rows, block) arena view in `out_dtype`."""
+    rows, bk = x.shape
+    assert bk == block, (x.shape, block)
+    return pl.pallas_call(
+        _cast_kernel,
+        grid=(rows,),
+        in_specs=[_row_specs(block)],
+        out_specs=_row_specs(block),
+        out_shape=jax.ShapeDtypeStruct((rows, block), out_dtype),
+        interpret=interpret,
+    )(x)
+
+
+# -- int8 block-scaled quantization --------------------------------------------
+
+def _quantize_kernel(x_ref, bits_ref, v_ref, s_ref, *, stochastic):
+    x = x_ref[...].astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), INT8_SCALE_FLOOR) / 127.0
+    v = x / scale
+    if stochastic:
+        # floor(v + u), u ~ U[0,1) from the top 24 bits: E[q] = v exactly
+        u = (bits_ref[...] >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+        q = jnp.floor(v + u)
+    else:
+        q = jnp.round(v)
+    v_ref[...] = jnp.clip(q, -127.0, 127.0).astype(jnp.int8)
+    s_ref[0] = scale
+
+
+def quantize_int8(x, bits, *, block: int = 256, interpret: bool = False):
+    """x: (blocks, block) arena view; bits: uint32 of the same shape or None
+    (deterministic round-to-nearest). Returns (int8 values (blocks, block),
+    f32 scales (blocks, 1)) with scale = absmax(block)/127."""
+    rows, bk = x.shape
+    assert bk == block, (x.shape, block)
+    stochastic = bits is not None
+    if bits is None:
+        bits = jnp.zeros((rows, block), jnp.uint32)
+    kernel = functools.partial(_quantize_kernel, stochastic=stochastic)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows,),
+        in_specs=[_row_specs(block), _row_specs(block)],
+        out_specs=[_row_specs(block), pl.BlockSpec((None, 1),
+                                                   lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((rows, block), jnp.int8),
+                   jax.ShapeDtypeStruct((rows, 1), jnp.float32)],
+        interpret=interpret,
+    )(x, bits)
+
+
+def _dequantize_kernel(v_ref, s_ref, out_ref):
+    out_ref[...] = v_ref[...].astype(jnp.float32) * s_ref[0]
+
+
+def dequantize_int8(values, scales, *, block: int = 256,
+                    interpret: bool = False):
+    """Inverse of `quantize_int8`: (blocks, block) int8 + (blocks, 1) f32
+    scales -> f32 (blocks, block)."""
+    rows, bk = values.shape
+    assert bk == block, (values.shape, block)
+    return pl.pallas_call(
+        _dequantize_kernel,
+        grid=(rows,),
+        in_specs=[_row_specs(block), pl.BlockSpec((None, 1),
+                                                  lambda i: (i, 0))],
+        out_specs=_row_specs(block),
+        out_shape=jax.ShapeDtypeStruct((rows, block), jnp.float32),
+        interpret=interpret,
+    )(values, scales)

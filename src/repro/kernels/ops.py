@@ -10,12 +10,32 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import comm_kernels as _comm
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.rglru_scan import rglru_scan as _rglru
 from repro.kernels.ssm_scan import ssm_scan as _ssm
 
 # CPU container default; flipped to False on real TPU deployments.
 INTERPRET = jax.default_backend() == "cpu"
+
+
+def _pad_rows(x, block: int):
+    """View (…, N) as (rows, block) with the trailing axis padded to a
+    block multiple. Blocks never span leading axes (replica rows)."""
+    lead, n = x.shape[:-1], x.shape[-1]
+    rows = 1
+    for d in lead:
+        rows *= d
+    npad = -(-n // block) * block
+    xr = x.reshape((rows, n))
+    if npad != n:
+        xr = jnp.pad(xr, ((0, 0), (0, npad - n)))
+    return xr.reshape((rows * (npad // block), block)), (lead, n, npad)
+
+
+def _unpad_rows(rows_view, meta):
+    lead, n, npad = meta
+    return rows_view.reshape((-1, npad))[:, :n].reshape(lead + (n,))
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
@@ -40,3 +60,70 @@ def rglru_scan(a, gx, h0, *, block_w: int = 512,
                interpret: bool | None = None):
     interpret = INTERPRET if interpret is None else interpret
     return _rglru(a, gx, h0, block_w=block_w, interpret=interpret)
+
+
+# -- fused flat-buffer exchange kernels (core/flatbuf.py arenas) ---------------
+
+@functools.partial(jax.jit, static_argnames=("staleness", "global_world",
+                                             "block", "interpret"))
+def eq1_merge(local, stale, *, staleness: int, global_world: int,
+              block: int = 1024, interpret: bool | None = None):
+    """Paper Eq. (1) merge fused over an arena of any shape (trailing axis
+    is the packed axis). Output in local's dtype."""
+    interpret = INTERPRET if interpret is None else interpret
+    lr, meta = _pad_rows(local, block)
+    sr, _ = _pad_rows(stale, block)
+    out = _comm.eq1_merge(lr, sr, staleness=staleness,
+                          global_world=global_world, block=block,
+                          interpret=interpret)
+    return _unpad_rows(out, meta)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def bf16_pack(x, *, block: int = 1024, interpret: bool | None = None):
+    """Arena -> bf16 wire buffer (same shape)."""
+    interpret = INTERPRET if interpret is None else interpret
+    xr, meta = _pad_rows(x, block)
+    return _unpad_rows(_comm.bf16_pack(xr, block=block,
+                                       interpret=interpret), meta)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "block",
+                                             "interpret"))
+def bf16_unpack(x, *, out_dtype=jnp.float32, block: int = 1024,
+                interpret: bool | None = None):
+    """bf16 wire buffer -> arena in `out_dtype` (same shape)."""
+    interpret = INTERPRET if interpret is None else interpret
+    xr, meta = _pad_rows(x, block)
+    return _unpad_rows(_comm.bf16_unpack(xr, out_dtype=out_dtype,
+                                         block=block, interpret=interpret),
+                       meta)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def quantize_int8(x, bits=None, *, block: int = 256,
+                  interpret: bool | None = None):
+    """Block-scaled int8 quantization over the trailing axis. `bits`
+    (uint32, same shape as x) enables stochastic rounding; None =
+    round-to-nearest. Returns (values int8 like x,
+    scales f32 (*lead, ceil(N/block)))."""
+    interpret = INTERPRET if interpret is None else interpret
+    xr, meta = _pad_rows(x, block)
+    if bits is not None:
+        bits, _ = _pad_rows(bits, block)
+    values, scales = _comm.quantize_int8(xr, bits, block=block,
+                                         interpret=interpret)
+    lead, n, npad = meta
+    return (_unpad_rows(values, meta),
+            scales.reshape(lead + (npad // block,)))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def dequantize_int8(values, scales, *, block: int = 256,
+                    interpret: bool | None = None):
+    """Inverse of `quantize_int8` (f32 output, values' shape)."""
+    interpret = INTERPRET if interpret is None else interpret
+    vr, meta = _pad_rows(values, block)
+    out = _comm.dequantize_int8(vr, scales.reshape((-1, 1)), block=block,
+                                interpret=interpret)
+    return _unpad_rows(out, meta)

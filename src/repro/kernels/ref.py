@@ -45,6 +45,61 @@ def ssm_scan_ref(x, dt, A, Bm, Cm, h0):
     return ys.swapaxes(0, 1), h
 
 
+def eq1_merge_ref(local, stale, *, staleness, global_world):
+    """Paper Eq. (1) over an arena (or any array): f32 accumulation,
+    result in local's dtype."""
+    s2 = 2.0 * staleness
+    p = float(global_world)
+    merged = (s2 * local.astype(jnp.float32)
+              + p * stale.astype(jnp.float32)) / (s2 + p)
+    return merged.astype(local.dtype)
+
+
+# keeps all-zero blocks finite (q == 0 regardless); shared with the
+# Pallas kernels in comm_kernels.py so oracle and kernel cannot drift
+INT8_SCALE_FLOOR = 1e-12
+
+
+def _blocked(x, block):
+    """(…, N) -> ((rows, n_blocks, block) padded view, (lead, N, Np))."""
+    lead, n = x.shape[:-1], x.shape[-1]
+    rows = 1
+    for d in lead:
+        rows *= d
+    npad = -(-n // block) * block
+    xr = x.reshape((rows, n))
+    if npad != n:
+        xr = jnp.pad(xr, ((0, 0), (0, npad - n)))
+    return xr.reshape((rows, npad // block, block)), (lead, n, npad)
+
+
+def quantize_int8_block_ref(x, *, block: int = 256, bits=None):
+    """Block-scaled int8 quantization over the trailing axis (blocks never
+    span leading axes). scale = absmax(block)/127; `bits` (uint32, same
+    shape as x) enables stochastic rounding, None = round-to-nearest.
+    Returns (values int8 like x, scales f32 (*lead, n_blocks))."""
+    xb, (lead, n, npad) = _blocked(x.astype(jnp.float32), block)
+    scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=-1, keepdims=True),
+                        INT8_SCALE_FLOOR) / 127.0
+    v = xb / scale
+    if bits is None:
+        q = jnp.round(v)
+    else:
+        bb, _ = _blocked(bits, block)
+        u = (bb >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+        q = jnp.floor(v + u)
+    values = jnp.clip(q, -127.0, 127.0).astype(jnp.int8)
+    values = values.reshape((-1, npad))[:, :n].reshape(lead + (n,))
+    return values, scale.reshape(lead + (npad // block,))
+
+
+def dequantize_int8_block_ref(values, scales, *, block: int = 256):
+    """Inverse of `quantize_int8_block_ref` (f32 output)."""
+    vb, (lead, n, npad) = _blocked(values, block)
+    out = vb.astype(jnp.float32) * scales.reshape(vb.shape[:-1] + (1,))
+    return out.reshape((-1, npad))[:, :n].reshape(lead + (n,))
+
+
 def rglru_scan_ref(a, gx, h0):
     """Diagonal recurrence h_t = a_t * h_{t-1} + gx_t.
     a, gx (B,S,W) f32; h0 (B,W). Returns (hs (B,S,W), h_final)."""

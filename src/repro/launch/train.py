@@ -38,6 +38,15 @@ def main():
                     help="macro = one compiled dispatch per controller "
                          "cycle; per_step = reference path")
     ap.add_argument("--max-cycle-len", type=int, default=32)
+    ap.add_argument("--wire-format", default=None,
+                    choices=["f32", "bf16", "int8"],
+                    help="wire tier of the global exchange; default derives "
+                         "bf16/f32 from the DASO compress flags, int8 is "
+                         "the beyond-paper block-scaled tier")
+    ap.add_argument("--exchange-impl", default="fused",
+                    choices=["fused", "per_leaf"],
+                    help="fused = one flat-buffer collective per exchange; "
+                         "per_leaf = legacy reference path")
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--nodes", type=int, default=4,
                     help="DASO replicas (paper nodes / pods)")
@@ -70,7 +79,8 @@ def main():
     loop_cfg = TrainLoopConfig(
         strategy=args.strategy, n_steps=args.steps, n_replicas=R,
         local_world=args.local_world, b_max=args.b_max, lr=args.lr,
-        executor=args.executor, max_cycle_len=args.max_cycle_len)
+        executor=args.executor, max_cycle_len=args.max_cycle_len,
+        wire_format=args.wire_format, exchange_impl=args.exchange_impl)
     lr_fn = warmup_linear_scaled(args.lr / (R * args.local_world),
                                  R * args.local_world,
                                  max(1, args.steps // 10))

@@ -39,6 +39,12 @@ class TrainLoopConfig:
     log_every: int = 50
     executor: str = "macro"           # macro | per_step
     max_cycle_len: int = 32           # cap on compiled macro-cycle length
+    # fused flat-buffer exchange knobs (core/flatbuf.py): wire_format None
+    # derives bf16/f32 from the DasoConfig compress_* flags; "f32" | "bf16"
+    # | "int8" forces one tier. exchange_impl "per_leaf" selects the legacy
+    # one-collective-per-leaf reference path.
+    wire_format: Optional[str] = None
+    exchange_impl: str = "fused"
 
 
 def build_strategy(loss_fn: Callable, cfg: TrainLoopConfig,
@@ -56,7 +62,9 @@ def build_strategy(loss_fn: Callable, cfg: TrainLoopConfig,
         b_max=cfg.b_max,
         warmup_steps=int(cfg.warmup_frac * cfg.n_steps),
         cooldown_steps=int(cfg.cooldown_frac * cfg.n_steps),
-        total_steps=cfg.n_steps)
+        total_steps=cfg.n_steps,
+        wire_format=cfg.wire_format,
+        exchange_impl=cfg.exchange_impl)
     controller = DasoController(dcfg, loss_window=cfg.loss_window)
     return make_strategy(cfg.strategy, loss_fn, optimizer, dcfg,
                          controller=controller)
@@ -88,7 +96,10 @@ def run_training(loss_fn: Callable, params0, data_fn: Callable,
         stats = result.executor_stats
         disp = (f" dispatches={stats.dispatches}/{cfg.n_steps}"
                 if stats is not None else "")
+        wire = (f" wire={cfg.wire_format or 'auto'}/{cfg.exchange_impl}"
+                if cfg.strategy != "sync" else "")
         log(f"[train] strategy={cfg.strategy} steps={cfg.n_steps} "
             f"final_loss={result.final_loss:.4f} "
-            f"sync_frac={result.sync_fraction:.3f} wall={dt:.1f}s{disp}")
+            f"sync_frac={result.sync_fraction:.3f} wall={dt:.1f}s"
+            f"{disp}{wire}")
     return result

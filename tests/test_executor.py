@@ -62,6 +62,89 @@ def test_executor_matches_per_step_path(strategy):
                [h[1] for h in ref.controller.history]
 
 
+def _multi_leaf_problem(key, R=2, per=8, d=6):
+    """Like the shared MLP problem but with 5 parameter leaves across 2
+    nested dicts, so the fused arena genuinely coalesces leaves."""
+    k = jax.random.split(key, 6)
+    params0 = {"emb": jax.random.normal(k[0], (d, 12)) * 0.3,
+               "mlp": {"w1": jax.random.normal(k[1], (12, 8)) * 0.3,
+                       "b1": jax.random.normal(k[2], (8,)) * 0.1,
+                       "w2": jax.random.normal(k[3], (8, 1)) * 0.3},
+               "scale": jax.random.normal(k[4], (1,)) * 0.1}
+    wtrue = jax.random.normal(k[5], (d, 1))
+
+    def loss_fn(params, batch):
+        h = jnp.tanh(batch["x"] @ params["emb"])
+        h = jnp.tanh(h @ params["mlp"]["w1"] + params["mlp"]["b1"])
+        pred = h @ params["mlp"]["w2"] * (1.0 + params["scale"])
+        return jnp.mean((pred - batch["y"]) ** 2), {}
+
+    def daso_data(step):
+        kk = jax.random.fold_in(key, step)
+        x = jax.random.normal(kk, (R, per, d))
+        return {"x": x, "y": jnp.tanh(x @ wtrue) * 0.5}
+
+    return params0, loss_fn, daso_data
+
+
+@pytest.mark.parametrize("wire_format", [None, "f32", "bf16"])
+def test_fused_arena_training_matches_per_leaf(wire_format):
+    """Acceptance: fused flat-buffer DASO training == the legacy per-leaf
+    exchange path, allclose at f32, on a multi-leaf model (the arena
+    coalesces 5 leaves into one buffer; numerics must not move)."""
+    key = jax.random.PRNGKey(7)
+    params0, loss_fn, daso_data = _multi_leaf_problem(key)
+    opt = sgd(momentum=0.9, weight_decay=1e-4)
+    n_steps = 40
+
+    def run(exchange_impl):
+        dcfg = DasoConfig(n_replicas=2, global_world=8, b_max=4,
+                          warmup_steps=4, cooldown_steps=4,
+                          total_steps=n_steps, wire_format=wire_format,
+                          exchange_impl=exchange_impl)
+        strat = make_strategy("daso", loss_fn, opt, dcfg,
+                              controller=DasoController(dcfg,
+                                                        loss_window=10))
+        return run_compiled_training(strat, params0, daso_data,
+                                     constant_lr(0.1), n_steps)
+
+    fused, per_leaf = run("fused"), run("per_leaf")
+    np.testing.assert_allclose(np.asarray(fused.losses, np.float32),
+                               np.asarray(per_leaf.losses, np.float32),
+                               rtol=1e-5, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(fused.params),
+                    jax.tree.leaves(per_leaf.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=1e-6)
+
+
+def test_int8_wire_training_converges():
+    """The beyond-paper int8 tier trains: loss stays finite and params end
+    within quantization distance of the f32-wire run."""
+    key = jax.random.PRNGKey(8)
+    params0, loss_fn, daso_data = _multi_leaf_problem(key)
+    opt = sgd(momentum=0.9, weight_decay=1e-4)
+    n_steps = 24
+
+    def run(wire_format):
+        dcfg = DasoConfig(n_replicas=2, global_world=8, b_max=4,
+                          warmup_steps=4, cooldown_steps=4,
+                          total_steps=n_steps, wire_format=wire_format)
+        strat = make_strategy("daso", loss_fn, opt, dcfg,
+                              controller=DasoController(dcfg,
+                                                        loss_window=10**9))
+        return run_compiled_training(strat, params0, daso_data,
+                                     constant_lr(0.1), n_steps)
+
+    i8, f32 = run("int8"), run("f32")
+    assert np.all(np.isfinite(i8.losses))
+    assert i8.final_loss < i8.losses[0]  # it actually trains
+    gap = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(jax.tree.leaves(i8.params),
+                              jax.tree.leaves(f32.params)))
+    assert gap < 0.05  # small quantization drift, not divergence
+
+
 def test_executor_params0_not_consumed():
     """Donation must never eat the caller's params0 (regression: the carry
     used to alias it)."""
