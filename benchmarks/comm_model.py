@@ -57,6 +57,23 @@ def ring_allreduce_s(nbytes: float, members: int, bw: float,
             + 2.0 * (members - 1) * latency)
 
 
+def degraded_exchange_s(param_bytes_fp32: float, n_members: int,
+                        c: ClusterModel, *, wire_format: str = "bf16",
+                        dcn_scale: float = 1.0,
+                        int8_block: int = 256) -> float:
+    """Cost of ONE global parameter exchange over `n_members` nodes whose
+    inter-node (DCN) bandwidth runs at `dcn_scale`× nominal — the fault
+    plan's `degrade_dcn` factor. This is the exchange_cost_fn the
+    resilience supervisor charges to its simulated clock
+    (benchmarks/resilience.py wires the two together)."""
+    if not 0.0 < dcn_scale:
+        raise ValueError(f"dcn_scale must be positive, got {dcn_scale}")
+    nbytes = model_wire_bytes(param_bytes_fp32, wire_format,
+                              int8_block=int8_block)
+    return ring_allreduce_s(nbytes, n_members, c.ib_bw * c.ib_eff * dcn_scale,
+                            latency=c.step_latency_s)
+
+
 def horovod_step_s(param_bytes_fp32: float, n_nodes: int,
                    c: ClusterModel, *, wire_format: str = "f16") -> float:
     w = n_nodes * c.gpus_per_node
@@ -74,17 +91,18 @@ def horovod_step_s(param_bytes_fp32: float, n_nodes: int,
 def daso_step_s(param_bytes_fp32: float, n_nodes: int, c: ClusterModel,
                 *, b: int = 4, blocking_frac: float = 0.2,
                 nonblocking_hidden: float = 0.8,
-                wire_format: str = "bf16") -> float:
+                wire_format: str = "bf16",
+                dcn_scale: float = 1.0) -> float:
     # every step: node-local gradient all-reduce over NVLink (NCCL)
     t_local = ring_allreduce_s(param_bytes_fp32, c.gpus_per_node,
                                c.nvlink_bw, latency=3e-6)
     # global: the fused parameter arena at `wire_format` over the group
     # (ONE GPU per node -> 1/4 traffic), every B steps, non-blocking
-    # (mostly hidden behind compute)
-    t_global = ring_allreduce_s(model_wire_bytes(param_bytes_fp32,
-                                                 wire_format), n_nodes,
-                                c.ib_bw * c.ib_eff,
-                                latency=c.step_latency_s)
+    # (mostly hidden behind compute); `dcn_scale` models a degraded
+    # inter-node network (fault-plan degrade_dcn)
+    t_global = degraded_exchange_s(param_bytes_fp32, n_nodes, c,
+                                   wire_format=wire_format,
+                                   dcn_scale=dcn_scale)
     # warm-up/cool-down fraction runs blocking (no overlap), cycling overlaps
     t_cycling = c.t_compute_s + t_local + (1 - nonblocking_hidden) * t_global / b
     t_blocking = c.t_compute_s + t_local + t_global

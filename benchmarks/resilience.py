@@ -1,0 +1,185 @@
+"""Resilience microbenchmarks: recovery cost and convergence impact of node
+failures, plus the full-state checkpoint/resume round-trip. Real runs of the
+supervisor (resilience/supervisor.py) on a tiny MLP — wall-clock recovery
+numbers are real; the DCN-degradation exchange costs come from the analytic
+cluster model (comm_model.degraded_exchange_s). Writes BENCH_resilience.json
+(consumed by CI's resilience-smoke job and EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_SCRIPT = """
+import json
+import os
+import time
+import jax, jax.numpy as jnp
+import numpy as np
+
+from repro.core.daso import DasoConfig
+from repro.core.executor import MacroCycleExecutor, make_strategy
+from repro.core.schedule import DasoController
+from repro.checkpoint.io import TrainState, load_train_state, save_train_state
+from repro.optim.optimizers import sgd
+from repro.optim.schedules import constant_lr
+from repro.resilience.faults import FaultPlan
+from repro.resilience.supervisor import run_with_faults
+from repro.train.loop import TrainLoopConfig, run_training
+
+from benchmarks.comm_model import ClusterModel, degraded_exchange_s
+
+QUICK = os.environ.get("BENCH_QUICK") == "1"
+OUT = os.environ.get("BENCH_RESILIENCE_OUT", "BENCH_resilience.json")
+
+R, per, d, h = 4, 8, 64, 64
+n_steps = 60 if QUICK else 140
+key = jax.random.PRNGKey(0)
+params0 = {"w1": jax.random.normal(key, (d, h)) * 0.05,
+           "w2": jax.random.normal(jax.random.fold_in(key, 1), (h, d)) * 0.05}
+wtrue = jax.random.normal(jax.random.fold_in(key, 2), (d, d))
+
+def loss_fn(params, batch):
+    hh = jnp.tanh(batch["x"] @ params["w1"])
+    return jnp.mean((hh @ params["w2"] - batch["y"]) ** 2), {}
+
+def data_fn(step):
+    k = jax.random.fold_in(key, step)
+    x = jax.random.normal(k, (R, per, d))
+    return {"x": x, "y": jnp.tanh(x @ wtrue) * 0.5}
+
+param_bytes = sum(x.size for x in jax.tree.leaves(params0)) * 4.0
+cm = ClusterModel()
+exchange_fn = lambda n, s: degraded_exchange_s(param_bytes, n, cm,
+                                               dcn_scale=s)
+
+def strategy():
+    cfg = DasoConfig(n_replicas=R, global_world=4 * R, b_max=4,
+                     warmup_steps=n_steps // 10,
+                     cooldown_steps=n_steps // 10, total_steps=n_steps)
+    return make_strategy("daso", loss_fn, sgd(momentum=0.9), cfg,
+                         controller=DasoController(cfg, loss_window=20))
+
+def faulty_run(name, events):
+    plan = FaultPlan.from_dicts(events)
+    plan.validate(R)
+    t0 = time.perf_counter()
+    rep = run_with_faults(strategy(), params0, data_fn, constant_lr(0.1),
+                          n_steps, plan, t_compute_s=0.120,
+                          exchange_cost_fn=exchange_fn)
+    wall = time.perf_counter() - t0
+    rec = {"name": name, "n_events": len(plan.events),
+           "final_loss": rep.result.final_loss,
+           "recovery_s": rep.recovery_s(),
+           "handle_s": [e["handle_s"] for e in rep.applied
+                        if e["kind"] in ("crash", "rejoin")],
+           "invalidations": rep.invalidations,
+           "simulated_time_s": rep.simulated_time_s,
+           "wall_s": wall}
+    results.append(rec)
+    rtot = sum(rec["recovery_s"])
+    print(f"CSV resilience_{name} {wall * 1e6:.1f} "
+          f"final_loss={rep.result.final_loss:.4f} "
+          f"recovery_total={rtot * 1e3:.1f}ms "
+          f"sim_time={rep.simulated_time_s:.1f}s")
+    return rec
+
+results = []
+
+# -- fault-free baseline vs K in-flight failures ------------------------
+base = faulty_run("fault_free", [])
+k1 = faulty_run("crash1_rejoin", [
+    {"step": n_steps // 3, "kind": "crash", "replica": 3},
+    {"step": 2 * n_steps // 3, "kind": "rejoin", "replica": 3}])
+k2 = faulty_run("crash2_rejoin", [
+    {"step": n_steps // 4, "kind": "crash", "replica": 3},
+    {"step": n_steps // 3, "kind": "crash", "replica": 2},
+    {"step": 2 * n_steps // 3, "kind": "rejoin", "replica": 3},
+    {"step": 3 * n_steps // 4, "kind": "rejoin", "replica": 2}])
+degraded = faulty_run("degraded_dcn", [
+    {"step": n_steps // 3, "kind": "degrade_dcn", "factor": 0.25},
+    {"step": 2 * n_steps // 3, "kind": "restore_dcn"}])
+
+# -- checkpoint/resume round-trip ---------------------------------------
+loop = TrainLoopConfig(strategy="daso", n_steps=n_steps, n_replicas=R,
+                       loss_window=20)
+fresh = run_training(loss_fn, params0, data_fn, loop, log=None)
+import tempfile
+ckpt_dir = tempfile.mkdtemp(prefix="bench_resilience_ckpt_")
+ck = TrainLoopConfig(**{**loop.__dict__, "ckpt_every": n_steps // 2,
+                        "ckpt_dir": ckpt_dir})
+t0 = time.perf_counter()
+run_training(loss_fn, params0, data_fn, ck, log=None)
+state_dir = os.path.join(ckpt_dir, sorted(os.listdir(ckpt_dir))[0])
+t_save_run = time.perf_counter() - t0
+t0 = time.perf_counter()
+ts = load_train_state(state_dir)
+load_s = time.perf_counter() - t0
+rs = TrainLoopConfig(**{**loop.__dict__, "resume_from": state_dir})
+resumed = run_training(loss_fn, params0, data_fn, rs, log=None)
+param_delta = max(float(np.max(np.abs(np.asarray(a, np.float32)
+                                      - np.asarray(b, np.float32))))
+                  for a, b in zip(jax.tree.leaves(resumed.params),
+                                  jax.tree.leaves(fresh.params)))
+loss_delta = float(np.max(np.abs(np.asarray(resumed.losses, np.float32)
+                                 - np.asarray(fresh.losses, np.float32))))
+results.append({"name": "resume", "resume_from_step": ts.step,
+                "load_s": load_s, "param_delta": param_delta,
+                "loss_delta": loss_delta})
+print(f"CSV resilience_resume {load_s * 1e6:.1f} "
+      f"from_step={ts.step} param_delta={param_delta:.2e} "
+      f"loss_delta={loss_delta:.2e}")
+
+by = {r["name"]: r for r in results}
+derived = {
+    "loss_delta_k1": k1["final_loss"] - base["final_loss"],
+    "loss_delta_k2": k2["final_loss"] - base["final_loss"],
+    "loss_delta_degraded_dcn": degraded["final_loss"] - base["final_loss"],
+    "recovery_s_mean": float(np.mean(k1["recovery_s"]
+                                     + k2["recovery_s"])),
+    "handle_s_mean": float(np.mean(k1["handle_s"] + k2["handle_s"])),
+    "invalidations_per_membership_event": 1.0,
+    "resume_param_delta": by["resume"]["param_delta"],
+    "resume_loss_delta": by["resume"]["loss_delta"],
+    # analytic: a 0.25x DCN makes one exchange ~4x more expensive; the
+    # controller stretches B to compensate (schedule.notify_dcn_scale)
+    "degraded_exchange_cost_ratio":
+        exchange_fn(R, 0.25) / exchange_fn(R, 1.0),
+}
+record = {"benchmark": "resilience",
+          "config": {"n_replicas": R, "n_steps": n_steps,
+                     "n_params": int(param_bytes // 4), "quick": QUICK,
+                     "b_max": 4, "t_compute_s": 0.120},
+          "results": results, "derived": derived}
+with open(OUT, "w") as f:
+    json.dump(record, f, indent=2)
+print(f"CSV resilience_loss_delta_k1 {0.0:.1f} "
+      f"{derived['loss_delta_k1']:+.4f} json={OUT}")
+print(f"CSV resilience_recovery_mean "
+      f"{derived['recovery_s_mean'] * 1e6:.1f} "
+      f"handle_mean={derived['handle_s_mean'] * 1e3:.2f}ms")
+"""
+
+
+def emit_rows(emit, *, quick=False):
+    """Recovery/loss-delta microbench + checkpoint resume round-trip on a
+    single device (the supervisor host path is device-count independent).
+    Writes the perf record to $BENCH_RESILIENCE_OUT (default
+    ./BENCH_resilience.json)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (SRC + os.pathsep
+                         + os.path.join(os.path.dirname(__file__), "..")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env["BENCH_QUICK"] = "1" if quick else "0"
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(_SCRIPT)],
+                       capture_output=True, text=True, timeout=600, env=env)
+    if r.returncode != 0:
+        emit("resilience_microbench_FAILED", 0.0, r.stderr[-200:])
+        return
+    for line in r.stdout.splitlines():
+        if line.startswith("CSV "):
+            _, name, us, derived = line.split(" ", 3)
+            emit(name, float(us), derived)

@@ -1,0 +1,87 @@
+"""Fault tolerance demo: train a tiny LM with DASO while a scripted fault
+plan kills a node mid-cycling, degrades the cross-pod network, and brings
+the node back — then prove the checkpoint/resume path reproduces an
+uninterrupted run exactly.
+
+  PYTHONPATH=src python examples/fault_tolerance.py
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core.executor import MacroCycleExecutor
+from repro.data.synthetic import SyntheticLM
+from repro.models.lm import init_params
+from repro.optim.optimizers import sgd
+from repro.optim.schedules import constant_lr
+from repro.resilience.faults import FaultPlan
+from repro.resilience.supervisor import run_with_faults
+from repro.train.loop import TrainLoopConfig, build_strategy, run_training
+
+
+def main():
+    cfg = get_reduced("llama3.2-1b").replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=128)
+    from repro.train.step import make_lm_loss
+    params0 = init_params(cfg, jax.random.PRNGKey(0))
+    loss_fn = make_lm_loss(cfg)
+    src = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32, seed=0)
+    R, per, n_steps = 4, 4, 48
+
+    def data_fn(step):
+        b = src.batch(R * per, step)
+        return {k: v.reshape((R, per) + v.shape[1:]) for k, v in b.items()}
+
+    loop_cfg = TrainLoopConfig(strategy="daso", n_steps=n_steps,
+                               n_replicas=R, b_max=4, loss_window=12)
+
+    # -- 1. scripted failures through the supervisor ------------------------
+    plan = FaultPlan.from_dicts([
+        {"step": 12, "kind": "crash", "replica": 3},
+        {"step": 16, "kind": "degrade_dcn", "factor": 0.25},
+        {"step": 28, "kind": "restore_dcn"},
+        {"step": 32, "kind": "rejoin", "replica": 3},
+    ])
+    strategy = build_strategy(loss_fn, loop_cfg, sgd(momentum=0.9))
+    ex = MacroCycleExecutor(strategy)
+    report = run_with_faults(strategy, params0, data_fn, constant_lr(0.05),
+                             n_steps, plan, executor=ex,
+                             t_compute_s=0.120,
+                             exchange_cost_fn=lambda n, s: 0.030 / s)
+    r = report.result
+    print(f"[faults] {len(plan.events)} events, final_loss="
+          f"{r.final_loss:.4f}, cycle-cache invalidations="
+          f"{report.invalidations}, simulated_time="
+          f"{report.simulated_time_s:.1f}s")
+    for ev in report.applied:
+        print(f"[faults]   step {ev['step']:>3} {ev['kind']:<12} "
+              f"handle={ev['handle_s'] * 1e3:6.1f}ms "
+              f"first_cycle={ev['first_cycle_s'] * 1e3:6.1f}ms")
+
+    # -- 2. deterministic resume -------------------------------------------
+    fresh = run_training(loss_fn, params0, data_fn, loop_cfg, log=None)
+    with tempfile.TemporaryDirectory() as d:
+        ck = TrainLoopConfig(**{**loop_cfg.__dict__,
+                                "ckpt_every": 16, "ckpt_dir": d})
+        run_training(loss_fn, params0, data_fn, ck, log=None)
+        state = sorted(os.listdir(d))[0]
+        rs = TrainLoopConfig(**{**loop_cfg.__dict__,
+                                "resume_from": os.path.join(d, state)})
+        resumed = run_training(loss_fn, params0, data_fn, rs, log=None)
+    delta = max(float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+                for a, b in zip(jax.tree.leaves(resumed.params),
+                                jax.tree.leaves(fresh.params)))
+    print(f"[resume] interrupted-at-{state} vs uninterrupted: "
+          f"max|Δparam| = {delta:.2e} "
+          f"({'EXACT' if delta == 0.0 else 'allclose'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,15 +1,34 @@
 """Checkpointing: flat-key npz tensors + JSON manifest (structure, step,
 dtypes). Sharding-aware: arrays are gathered to host on save and placed back
-with the provided shardings on restore."""
+with the provided shardings on restore.
+
+Two layers:
+
+  * `save_checkpoint` / `load_checkpoint` — a bare pytree of arrays. The
+    flatten preserves container kinds (dict / list / tuple), so a strategy
+    carry round-trips with its exact treedef — which is what lets a resumed
+    run hit the same compiled programs as the uninterrupted one.
+  * `save_train_state` / `load_train_state` — the versioned full training
+    snapshot (`TrainState`): strategy carry (params + optimizer state +
+    in-flight exchange buffer), `DasoController` schedule state, RNG key,
+    data cursor, elastic-membership mask, and the loss trace so far. A run
+    resumed from a TrainState reproduces the uninterrupted run's losses and
+    final params exactly at f32 (tests/test_resilience.py).
+"""
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, Optional
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# bump when TrainState's layout changes incompatibly; loaders refuse
+# newer-than-known versions instead of misreading them
+TRAIN_STATE_VERSION = 1
 
 
 def _flatten(tree, prefix=""):
@@ -18,8 +37,12 @@ def _flatten(tree, prefix=""):
         for k, v in tree.items():
             out.update(_flatten(v, f"{prefix}{k}/"))
     elif isinstance(tree, (list, tuple)):
+        # distinct markers so tuples restore as tuples (treedef-exact
+        # round-trip: a carry saved as a tuple must not come back a list,
+        # or the resumed run would retrace every compiled program)
+        mark = "#" if isinstance(tree, list) else "!"
         for i, v in enumerate(tree):
-            out.update(_flatten(v, f"{prefix}#{i}/"))
+            out.update(_flatten(v, f"{prefix}{mark}{i}/"))
     else:
         out[prefix[:-1]] = tree
     return out
@@ -37,8 +60,10 @@ def _unflatten(flat: Dict[str, Any]):
     def fix(node):
         if not isinstance(node, dict):
             return node
-        if node and all(k.startswith("#") for k in node):
+        if node and all(k[:1] == "#" for k in node):
             return [fix(node[f"#{i}"]) for i in range(len(node))]
+        if node and all(k[:1] == "!" for k in node):
+            return tuple(fix(node[f"!{i}"]) for i in range(len(node)))
         return {k: fix(v) for k, v in node.items()}
 
     return fix(root)
@@ -51,9 +76,9 @@ def save_checkpoint(path: str, tree, *, step: int = 0,
     arrays, manifest = {}, {"step": step, "dtypes": {}, "extra": extra or {}}
     for k, v in flat.items():
         arr = np.asarray(jax.device_get(v))
-        manifest["dtypes"][k] = str(v.dtype)
+        manifest["dtypes"][k] = str(jnp.asarray(v).dtype)
         if arr.dtype == jnp.bfloat16:
-            arr = arr.astype(np.float32)  # npz-safe container
+            arr = arr.astype(np.float32)  # npz-safe container (exact widen)
         arrays[k] = arr
     np.savez(os.path.join(path, "arrays.npz"), **arrays)
     with open(os.path.join(path, "manifest.json"), "w") as f:
@@ -75,3 +100,74 @@ def load_checkpoint(path: str, *, shardings=None):
     if shardings is not None:
         tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
     return tree, manifest
+
+
+# -- full-state training snapshots ---------------------------------------------
+
+@dataclass
+class TrainState:
+    """Everything needed to resume training deterministically.
+
+    `carry` is the strategy's carry pytree exactly as threaded through the
+    executor — for DASO that is (params_R, opt_state_R, inflight_R), so the
+    in-flight exchange snapshot survives a crash mid-cycle-sequence.
+    `controller` is `DasoController.state_dict()` (None for the sync
+    strategy). `membership` is the elastic active-replica mask in force
+    when the snapshot was taken. `step` doubles as the data cursor: the
+    synthetic sources are seeded per (seed, step), so resuming draws
+    `data_fn(step)` onward with no separate stream state. `rng` is for
+    callers that thread an explicit PRNGKey through training (the built-in
+    loop derives everything from step + seed and stores None)."""
+    step: int
+    carry: Any
+    controller: Optional[Dict[str, Any]] = None
+    membership: Optional[List[float]] = None
+    rng: Optional[Any] = None          # PRNGKey data (array) or None
+    strategy: str = "daso"
+    losses: List[float] = field(default_factory=list)
+    extra: Dict[str, Any] = field(default_factory=dict)
+    version: int = TRAIN_STATE_VERSION
+
+
+def save_train_state(path: str, state: TrainState) -> None:
+    """Write a TrainState: arrays (carry, rng) into the npz layer, host
+    scheduling state into the manifest."""
+    arrays = {"carry": state.carry}
+    if state.rng is not None:
+        arrays["rng"] = state.rng
+    host = {"version": state.version, "step": state.step,
+            "controller": state.controller,
+            "membership": state.membership,
+            "strategy": state.strategy,
+            "losses": [float(x) for x in state.losses],
+            "extra": state.extra}
+    save_checkpoint(path, arrays, step=state.step,
+                    extra={"train_state": host})
+
+
+def load_train_state(path: str, *, carry_shardings=None) -> TrainState:
+    """Read a TrainState back. `carry_shardings`: optional pytree of
+    NamedShardings matching the carry, for distributed placement. Raises on
+    a checkpoint written by a newer TrainState version, or on a plain
+    parameter checkpoint (use `load_checkpoint` for those)."""
+    tree, manifest = load_checkpoint(path)
+    host = manifest.get("extra", {}).get("train_state")
+    if host is None:
+        raise ValueError(f"{path} is not a TrainState checkpoint "
+                         "(no train_state manifest entry); use "
+                         "load_checkpoint for bare parameter snapshots")
+    if host["version"] > TRAIN_STATE_VERSION:
+        raise ValueError(f"TrainState version {host['version']} is newer "
+                         f"than supported {TRAIN_STATE_VERSION}")
+    carry = tree["carry"]
+    if carry_shardings is not None:
+        carry = jax.tree.map(lambda x, s: jax.device_put(x, s),
+                             carry, carry_shardings)
+    return TrainState(step=int(host["step"]), carry=carry,
+                      controller=host.get("controller"),
+                      membership=host.get("membership"),
+                      rng=tree.get("rng"),
+                      strategy=host.get("strategy", "daso"),
+                      losses=[float(x) for x in host.get("losses", [])],
+                      extra=host.get("extra", {}),
+                      version=int(host["version"]))

@@ -29,6 +29,12 @@ collective set exact for the roofline audit):
   blocking  local + synchronous global parameter average with bf16
             transfer compression (warm-up / cool-down phases)
   hard_avg  local + naive parameter overwrite (local-SGD ablation)
+
+Every variant optionally bakes a static elastic-membership mask
+(`membership=` on `daso_train_step`): exchanges become membership-weighted
+means over the active replicas (still one collective per sync), Eq. (1)
+runs with the effective world size, and dropped replicas' rows are frozen
+ghosts until a rejoin re-seeds them (src/repro/resilience/).
 """
 from __future__ import annotations
 
@@ -107,8 +113,8 @@ def replicate_params(params, n_replicas: int):
         lambda p: jnp.broadcast_to(p[None], (n_replicas,) + p.shape), params)
 
 
-def dereplicate_params(params):
-    return jax.tree.map(lambda p: p[0], params)
+def dereplicate_params(params, index: int = 0):
+    return jax.tree.map(lambda p: p[index], params)
 
 
 def _wire_format_from(wire_dtype, wire_format) -> str:
@@ -127,20 +133,25 @@ def _wire_format_from(wire_dtype, wire_format) -> str:
 
 
 def _arena_mean(arena, wire_format: str, *, int8_block: int,
-                use_kernels: bool):
+                use_kernels: bool, mask=None):
     """Mean over the leading replica axis of one arena, kept as a (1, N)
     buffer (the caller broadcasts per leaf after unpacking — one full-size
     materialization instead of two). Exactly one axis-0 reduction per
     arena — the op that lowers to the cross-pod (DCN) all-reduce on the
-    production mesh."""
-    r = arena.shape[0]
+    production mesh.
+
+    `mask` (a normalized membership tuple, see
+    `flatbuf.normalize_membership`) makes the mean membership-weighted:
+    dropped replicas' rows are zeroed before the reduce and the divisor is
+    the active count — still one collective, the elastic-membership
+    contract (tests/test_resilience.py)."""
     if not jnp.issubdtype(arena.dtype, jnp.floating):
         # integer leaves cross the wire at their own dtype; the mean is
         # computed in f32 and rounded back (an int-dtype reduce would
         # truncate the 1/R scale to zero)
         w = arena.astype(jnp.float32)
-        m = jax.lax.reduce(w, jnp.zeros((), jnp.float32), jax.lax.add, (0,))
-        return jnp.round(m * (1.0 / r))[None].astype(arena.dtype)
+        return jnp.round(
+            flatbuf.masked_axis0_mean(w, mask)).astype(arena.dtype)
     if wire_format == "int8":
         # each replica quantizes its arena (int8 + per-block scales is what
         # a real DCN transfer would carry); the mean runs over the
@@ -149,35 +160,31 @@ def _arena_mean(arena, wire_format: str, *, int8_block: int,
         # unbiased stochastic tier stays a codec/kernel-API option.
         deq = flatbuf.wire_roundtrip(arena, "int8", int8_block=int8_block,
                                      use_kernels=use_kernels)
-        m = jax.lax.reduce(deq, jnp.zeros((), jnp.float32),
-                           jax.lax.add, (0,))
-        return (m * (1.0 / r))[None].astype(arena.dtype)
-    # Pin the reduction computation dtype with lax.reduce: both jnp.mean
+        return flatbuf.masked_axis0_mean(deq, mask).astype(arena.dtype)
+    # Pin the reduction computation dtype by reducing the wire-cast arena
+    # directly (flatbuf.masked_axis0_mean uses lax.reduce): both jnp.mean
     # and jnp.sum(dtype=...) silently upcast bf16 accumulation to f32,
     # which puts f32 on the cross-pod wire (verified in HLO).
     w = (flatbuf.encode_wire(arena, "bf16", use_kernels=use_kernels)
          if wire_format == "bf16" else arena)
-    wd = w.dtype
-    m = jax.lax.reduce(w, jnp.zeros((), wd), jax.lax.add, (0,))
-    return ((m * jnp.asarray(1.0 / r, wd))[None]).astype(arena.dtype)
+    return flatbuf.masked_axis0_mean(w, mask).astype(arena.dtype)
 
 
-def replica_mean_per_leaf(tree, wire_dtype=None):
+def replica_mean_per_leaf(tree, wire_dtype=None, mask=None):
     """Legacy per-leaf exchange: one cross-pod all-reduce PER LEAF. Kept as
     the equivalence oracle and microbenchmark baseline for the fused arena
-    path (`replica_mean`); f32/bf16 wire only."""
+    path (`replica_mean`); f32/bf16 wire only. `mask` applies the same
+    membership weighting as the fused path."""
     def leaf(x):
         wd = jnp.dtype(wire_dtype or x.dtype)
-        w = x.astype(wd)
-        m = jax.lax.reduce(w, jnp.zeros((), wd), jax.lax.add, (0,))
-        m = (m * jnp.asarray(1.0 / x.shape[0], wd))[None]
+        m = flatbuf.masked_axis0_mean(x.astype(wd), mask)
         return jnp.broadcast_to(m, x.shape).astype(x.dtype)
     return jax.tree.map(leaf, tree)
 
 
 def replica_mean(tree, wire_dtype=None, *, wire_format=None,
                  impl: str = "fused", int8_block: int = 256,
-                 use_kernels: bool = False):
+                 use_kernels: bool = False, mask=None):
     """Mean over the leading replica axis, broadcast back.
 
     Default path packs the pytree into one contiguous arena per dtype
@@ -185,18 +192,20 @@ def replica_mean(tree, wire_dtype=None, *, wire_format=None,
     regardless of leaf count; `wire_format` ("f32" | "bf16" | "int8")
     selects the transfer tier. `impl="per_leaf"` restores the legacy
     one-collective-per-leaf reference path. `wire_dtype` is the legacy
-    spelling (None = uncompressed, jnp.bfloat16 = 16-bit packaging)."""
+    spelling (None = uncompressed, jnp.bfloat16 = 16-bit packaging).
+    `mask` (normalized membership tuple, or None = all active) restricts
+    the mean to active replicas — the elastic-membership exchange."""
     wf = _wire_format_from(wire_dtype, wire_format)
     if impl == "per_leaf":
         if wf == "int8":
             raise ValueError("int8 wire format requires the fused arena "
                              "exchange (impl='fused')")
         return replica_mean_per_leaf(
-            tree, jnp.bfloat16 if wf == "bf16" else None)
+            tree, jnp.bfloat16 if wf == "bf16" else None, mask=mask)
     layout = flatbuf.build_layout(tree, batch_dims=1)
     arenas = flatbuf.pack(tree, layout)
     out = {k: _arena_mean(a, wf, int8_block=int8_block,
-                          use_kernels=use_kernels)
+                          use_kernels=use_kernels, mask=mask)
            for k, a in arenas.items()}
     # unpack the (1, N) means, then broadcast per leaf: the broadcast fuses
     # into each leaf's consumer instead of materializing a second full-size
@@ -216,18 +225,39 @@ def replica_divergence(params) -> jnp.ndarray:
                             [leaf(x) for x in jax.tree.leaves(params)])
 
 
+# -- elastic membership --------------------------------------------------------
+
+def freeze_inactive(new_tree, old_tree, mask):
+    """Select per replica row: active rows advance to `new_tree`, dropped
+    rows keep `old_tree`. A dropped replica's row is a ghost in the SPMD
+    emulation (the real node is gone); freezing it keeps the ghost from
+    drifting so a later rejoin re-seed is the only thing that writes it.
+    mask=None (all active) is the identity."""
+    if mask is None:
+        return new_tree
+    keep = jnp.asarray([m != 0.0 for m in mask])
+
+    def leaf(n, o):
+        col = keep.reshape((len(mask),) + (1,) * (n.ndim - 1))
+        return jnp.where(col, n, o)
+
+    return jax.tree.map(leaf, new_tree, old_tree)
+
+
 # -- DASO primitive operations ------------------------------------------------
 
 def global_send(params, *, compress: bool = False, wire_format=None,
                 impl: str = "fused", int8_block: int = 256,
-                use_kernels: bool = False):
+                use_kernels: bool = False, mask=None):
     """Snapshot + start global exchange: returns the in-flight buffer
     (replica mean of current params, one copy per replica). The wire tier
     comes from `wire_format` (or legacy compress=True -> bf16,
-    beyond-paper for the non-blocking path, see DasoConfig)."""
+    beyond-paper for the non-blocking path, see DasoConfig). `mask`
+    restricts the mean to active replicas (elastic membership)."""
     wf = wire_format or ("bf16" if compress else "f32")
     return replica_mean(params, wire_format=wf, impl=impl,
-                        int8_block=int8_block, use_kernels=use_kernels)
+                        int8_block=int8_block, use_kernels=use_kernels,
+                        mask=mask)
 
 
 def global_receive_per_leaf(params, inflight, *, staleness: int,
@@ -246,10 +276,14 @@ def global_receive_per_leaf(params, inflight, *, staleness: int,
     return jax.tree.map(leaf, params, inflight)
 
 
-def global_receive(params, inflight, *, staleness: int, global_world: int,
-                   impl: str = "fused", use_kernels: bool = False):
+def global_receive(params, inflight, *, staleness: int, global_world,
+                   impl: str = "fused", use_kernels: bool = False,
+                   mask=None):
     """Paper Eq. (1): weighted merge of stale global average with current
-    local params. staleness S = batches waited; global_world P.
+    local params. staleness S = batches waited; global_world P — a float
+    under elastic membership (the effective P of the surviving world,
+    `global_world * n_active / n_replicas`), so the merge weighting tracks
+    dynamic membership. Dropped replicas' rows stay frozen (`mask`).
 
     The merge has no collective, so in jnp-land XLA already fuses the
     leaf-wise multiply-add chains into one elementwise pass — packing an
@@ -257,15 +291,17 @@ def global_receive(params, inflight, *, staleness: int, global_world: int,
     runs as ONE Pallas `eq1_merge` program over the packed arena (the
     TPU-kernel tier, where a single contiguous launch is the point)."""
     if impl == "per_leaf":
-        return global_receive_per_leaf(params, inflight,
-                                       staleness=staleness,
-                                       global_world=global_world)
+        merged = global_receive_per_leaf(params, inflight,
+                                         staleness=staleness,
+                                         global_world=global_world)
+        return freeze_inactive(merged, params, mask)
     from repro.kernels.ref import eq1_merge_ref
     if not use_kernels:
-        return jax.tree.map(
+        merged = jax.tree.map(
             lambda a, b: eq1_merge_ref(a, b, staleness=staleness,
                                        global_world=global_world),
             params, inflight)
+        return freeze_inactive(merged, params, mask)
     from repro.kernels.ops import eq1_merge
     layout = flatbuf.build_layout(params, batch_dims=1)
     locals_ = flatbuf.pack(params, layout)
@@ -276,17 +312,20 @@ def global_receive(params, inflight, *, staleness: int, global_world: int,
                eq1_merge_ref(a, stales[k], staleness=staleness,
                              global_world=global_world))
            for k, a in locals_.items()}
-    return flatbuf.unpack(out, layout)
+    return freeze_inactive(flatbuf.unpack(out, layout), params, mask)
 
 
 def blocking_sync(params, *, compress: bool = True, wire_format=None,
                   impl: str = "fused", int8_block: int = 256,
-                  use_kernels: bool = False):
+                  use_kernels: bool = False, mask=None):
     """Synchronous global average (warm-up / cool-down), with the paper's
-    16-bit transfer compression (or the tier in `wire_format`)."""
+    16-bit transfer compression (or the tier in `wire_format`). `mask`
+    restricts the average to active replicas and freezes dropped rows."""
     wf = wire_format or ("bf16" if compress else "f32")
-    return replica_mean(params, wire_format=wf, impl=impl,
-                        int8_block=int8_block, use_kernels=use_kernels)
+    synced = replica_mean(params, wire_format=wf, impl=impl,
+                          int8_block=int8_block, use_kernels=use_kernels,
+                          mask=mask)
+    return freeze_inactive(synced, params, mask)
 
 
 # -- assembled train step ------------------------------------------------------
@@ -354,40 +393,68 @@ MODES = ("local", "send", "receive", "send_receive", "blocking", "hard_avg")
 
 def daso_train_step(loss_fn: Callable, optimizer: Optimizer, cfg: DasoConfig,
                     *, mode: str, staleness: int = 1,
-                    spmd_axis_name: Optional[str] = None, n_micro: int = 1):
+                    spmd_axis_name: Optional[str] = None, n_micro: int = 1,
+                    membership=None):
     """Build one statically-specialized DASO step function.
 
     step(params_R, opt_R, inflight, batch_R, lr)
         -> (params_R, opt_R, inflight, metrics)
-    """
+
+    `membership` (optional 0/1 mask over the R replicas) bakes elastic
+    membership into the compiled step: exchanges become membership-weighted
+    means over the active set, Eq. (1) runs with the effective world size
+    P_eff = P * n_active / R, dropped replicas' rows are frozen, and the
+    reported loss averages active replicas only. The mask is a *static*
+    constant — a membership change compiles new step variants (the executor
+    invalidates its cycle cache, see resilience/supervisor.py), which keeps
+    the fixed-membership HLO bit-identical to the non-elastic build."""
     assert mode in MODES, mode
     lstep = local_step(loss_fn, optimizer, spmd_axis_name=spmd_axis_name,
                        n_micro=n_micro)
 
     impl, kern, blk = (cfg.exchange_impl, cfg.exchange_kernels,
                        cfg.int8_block)
+    mask = flatbuf.normalize_membership(membership, cfg.n_replicas)
+    n_active = cfg.n_replicas if mask is None else int(sum(mask))
+    p_eff = (cfg.global_world if mask is None
+             else cfg.global_world * n_active / cfg.n_replicas)
 
     def step(params, opt_state, inflight, batch, lr):
         if mode in ("receive", "send_receive"):
             params = global_receive(params, inflight,
                                     staleness=staleness,
-                                    global_world=cfg.global_world,
-                                    impl=impl, use_kernels=kern)
-        params, opt_state, loss_r, aux_r = lstep(params, opt_state, batch, lr)
+                                    global_world=p_eff,
+                                    impl=impl, use_kernels=kern, mask=mask)
+        new_p, new_o, loss_r, aux_r = lstep(params, opt_state, batch, lr)
+        if mask is not None:
+            new_p = freeze_inactive(new_p, params, mask)
+            new_o = freeze_inactive(new_o, opt_state, mask)
+        params, opt_state = new_p, new_o
         if mode in ("send", "send_receive"):
             inflight = global_send(
                 params, wire_format=cfg.wire_format_for(blocking=False),
-                impl=impl, int8_block=blk, use_kernels=kern)
+                impl=impl, int8_block=blk, use_kernels=kern, mask=mask)
         elif mode == "blocking":
             params = blocking_sync(
                 params, wire_format=cfg.wire_format_for(blocking=True),
-                impl=impl, int8_block=blk, use_kernels=kern)
+                impl=impl, int8_block=blk, use_kernels=kern, mask=mask)
         elif mode == "hard_avg":
-            params = replica_mean(params, impl=impl)
-        metrics = {"loss": jnp.mean(loss_r), "loss_per_replica": loss_r}
+            params = freeze_inactive(
+                replica_mean(params, impl=impl, mask=mask), params, mask)
+        if mask is None:
+            loss = jnp.mean(loss_r)
+        else:
+            w = jnp.asarray(mask, loss_r.dtype)
+            loss = jnp.sum(loss_r * w) / n_active
+        metrics = {"loss": loss, "loss_per_replica": loss_r}
         for k, v in aux_r.items():
             if isinstance(v, jnp.ndarray) and v.ndim <= 1:
-                metrics[k] = jnp.mean(v)
+                if (mask is not None and v.ndim == 1
+                        and v.shape[0] == cfg.n_replicas):
+                    metrics[k] = jnp.sum(
+                        v * jnp.asarray(mask, v.dtype)) / n_active
+                else:
+                    metrics[k] = jnp.mean(v)
         return params, opt_state, inflight, metrics
 
     return step

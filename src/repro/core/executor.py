@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import flatbuf
 from repro.core.daso import (DasoConfig, daso_train_step, dereplicate_params,
                              replica_divergence, replicate_params,
                              sync_train_step)
@@ -166,9 +167,35 @@ class DasoStrategy(Strategy):
     count), so each compiled macro-cycle contains exactly one fused
     exchange program per sync step in its shape."""
 
-    def __init__(self, loss_fn, optimizer, cfg, **kw):
+    def __init__(self, loss_fn, optimizer, cfg, *, membership=None, **kw):
         assert cfg is not None, "daso strategy requires a DasoConfig"
         super().__init__(loss_fn, optimizer, cfg, **kw)
+        self._membership = flatbuf.normalize_membership(
+            membership, cfg.n_replicas)
+
+    # -- elastic membership ------------------------------------------------
+    @property
+    def membership(self):
+        """Active-replica mask as a 0/1 tuple, or None when every replica
+        is active (the non-elastic fast path)."""
+        return self._membership
+
+    def n_active(self) -> int:
+        return (self.cfg.n_replicas if self._membership is None
+                else int(sum(self._membership)))
+
+    def set_membership(self, mask) -> None:
+        """Change the active-replica set. The mask is baked *statically*
+        into every step variant (membership-weighted exchange, frozen ghost
+        rows — core/daso.py), so this drops the strategy's step-fn cache;
+        an executor holding compiled cycles over the old variants must be
+        `invalidate()`d by the caller (resilience/supervisor.py does both).
+        Static baking keeps the steady-state HLO free of membership
+        arithmetic — faults are rare, recompiles at fault boundaries are
+        the right trade."""
+        self._membership = flatbuf.normalize_membership(
+            mask, self.cfg.n_replicas)
+        self._steps.clear()
 
     def init_carry(self, params0):
         params = replicate_params(params0, self.cfg.n_replicas)
@@ -180,12 +207,17 @@ class DasoStrategy(Strategy):
         return (params, opt_state, inflight)
 
     def finalize_params(self, carry):
-        return dereplicate_params(carry[0])
+        # under elastic membership row 0 may be a dead replica's frozen
+        # ghost — report the first ACTIVE replica's params instead
+        idx = (0 if self._membership is None
+               else self._membership.index(1.0))
+        return dereplicate_params(carry[0], index=idx)
 
     def build_step(self, mode, staleness):
         raw = daso_train_step(self.loss_fn, self.optimizer, self.cfg,
                               mode=mode, staleness=staleness,
-                              n_micro=self.n_micro)
+                              n_micro=self.n_micro,
+                              membership=self._membership)
 
         def step(carry, batch, lr):
             params, opt_state, inflight = carry
@@ -281,6 +313,7 @@ class ExecutorStats:
     cycles: int = 0            # macro-cycles executed compiled
     compiles: int = 0          # distinct cycle shapes compiled
     fallback_steps: int = 0    # steps run on the per-step fallback path
+    invalidations: int = 0     # cache flushes (membership changes etc.)
 
     def dispatches_per_step(self) -> float:
         total = self.steps + self.fallback_steps
@@ -329,6 +362,20 @@ class MacroCycleExecutor:
             self._programs[shape] = self._build_program(shape)
             self.stats.compiles += 1
         return self._programs[shape]
+
+    def invalidate(self) -> int:
+        """Drop every compiled cycle program and per-step fallback. Called
+        when something the step builders bake statically changed — a
+        membership change re-bakes the exchange weights into new step
+        variants (DasoStrategy.set_membership), so programs closed over the
+        old variants are stale. Returns the number of programs dropped;
+        subsequent cycles recompile against the strategy's current step
+        fns."""
+        n = len(self._programs) + len(self._per_step)
+        self._programs.clear()
+        self._per_step.clear()
+        self.stats.invalidations += 1
+        return n
 
     def _build_program(self, shape: CycleShape) -> Callable:
         runs = _group_runs(shape)
@@ -396,10 +443,34 @@ class MacroCycleExecutor:
         return carry, metrics
 
 
+def dispatch_planned_cycle(ex: MacroCycleExecutor, carry, plan: CyclePlan,
+                           data_fn: Callable, lr_fn: Callable,
+                           n_steps: int):
+    """Stage one planned cycle's batches/lrs, execute it, and convert the
+    stacked device metrics to host floats. Returns (carry, cycle_losses,
+    per_step_metrics). Shared by `run_compiled_training` and the resilience
+    supervisor so the two dispatch loops cannot silently drift."""
+    steps = range(plan.start_step, plan.start_step + len(plan))
+    per_step = [data_fn(t) for t in steps]
+    batches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_step)
+    lrs = jnp.asarray([lr_fn(t) for t in steps], jnp.float32)
+    carry, metrics = ex.run_cycle(
+        carry, plan, batches, lrs,
+        is_tail=plan.start_step + len(plan) >= n_steps)
+    host = {k: np.asarray(v) for k, v in metrics.items()}
+    cycle_losses = [float(host["loss"][j]) for j in range(len(plan))]
+    per_step_metrics = [{k: float(v[j]) for k, v in host.items()
+                         if v.ndim == 1} for j in range(len(plan))]
+    return carry, cycle_losses, per_step_metrics
+
+
 def run_compiled_training(strategy: Strategy, params0, data_fn: Callable,
                           lr_fn: Callable, n_steps: int, *,
                           executor: Optional[MacroCycleExecutor] = None,
-                          track_divergence: bool = False):
+                          track_divergence: bool = False,
+                          start_step: int = 0, carry=None,
+                          ckpt_every: int = 0,
+                          ckpt_cb: Optional[Callable] = None):
     """Macro-cycle counterpart of `simulator.run_per_step_training`: plans
     cycles from the strategy's controller, stacks the per-step batches, and
     dispatches one compiled program per cycle. Numerically equivalent to the
@@ -408,37 +479,43 @@ def run_compiled_training(strategy: Strategy, params0, data_fn: Callable,
     With `track_divergence` the replica divergence is sampled once per cycle
     (the per-step path samples every step) — it is a host-side diagnostic
     that would otherwise force a per-step sync point.
+
+    Resume/checkpoint surface (checkpoint/io.py TrainState): pass
+    `start_step` + the restored `carry` to continue a run (the strategy's
+    controller must already be restored — train/loop.py does both), and
+    `ckpt_every` + `ckpt_cb(completed_steps, carry, losses)` to snapshot.
+    The callback fires at the first *cycle boundary* at or past each
+    `ckpt_every` multiple — a checkpointed step is therefore always a step
+    where a fresh run also had a plan boundary, which is what makes a
+    resumed schedule (and hence the numerics) identical to an
+    uninterrupted run.
     """
     from repro.core.simulator import SimResult
 
     ex = executor or MacroCycleExecutor(strategy)
-    carry = strategy.init_carry(params0)
+    carry = strategy.init_carry(params0) if carry is None else carry
     losses: List[float] = []
     metrics_log: List[Dict[str, float]] = []
     divs: List[float] = []
-    step = 0
+    step = start_step
+    next_ckpt = ((start_step // ckpt_every + 1) * ckpt_every
+                 if ckpt_every else None)
     while step < n_steps:
         plan = strategy.plan_cycle(step, min(ex.max_cycle_len,
                                              n_steps - step))
-        steps = range(step, step + len(plan))
-        per_step = [data_fn(t) for t in steps]
-        batches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_step)
-        lrs = jnp.asarray([lr_fn(t) for t in steps], jnp.float32)
-        carry, metrics = ex.run_cycle(
-            carry, plan, batches, lrs,
-            is_tail=step + len(plan) >= n_steps)
-        host = {k: np.asarray(v) for k, v in metrics.items()}
-        cycle_losses = [float(host["loss"][j]) for j in range(len(plan))]
+        carry, cycle_losses, per_step_metrics = dispatch_planned_cycle(
+            ex, carry, plan, data_fn, lr_fn, n_steps)
         losses.extend(cycle_losses)
-        for j in range(len(plan)):
-            metrics_log.append({k: float(v[j]) for k, v in host.items()
-                                if v.ndim == 1})
+        metrics_log.extend(per_step_metrics)
         strategy.observe(cycle_losses)
         if track_divergence:
             d = strategy.divergence(carry)
             if d is not None:
                 divs.extend([d] * len(plan))
         step += len(plan)
+        if next_ckpt is not None and ckpt_cb is not None and step >= next_ckpt:
+            ckpt_cb(step, carry, losses)
+            next_ckpt = (step // ckpt_every + 1) * ckpt_every
     return SimResult(losses=losses, metrics=metrics_log,
                      params=strategy.finalize_params(carry),
                      sync_fraction=strategy.sync_fraction(),

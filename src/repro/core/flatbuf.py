@@ -134,6 +134,55 @@ def unpack(arenas: Dict[str, jnp.ndarray], layout: ArenaLayout):
     return jax.tree.unflatten(layout.treedef, leaves)
 
 
+# -- elastic membership --------------------------------------------------------
+
+def normalize_membership(mask, n_replicas: int) -> Optional[Tuple[float, ...]]:
+    """Validate an active-replica mask against the replica-axis size and
+    canonicalize it to a tuple of 0.0/1.0 floats — the *static* weights the
+    masked arena reduction bakes into a compiled exchange. Returns None for
+    the all-active mask (callers treat None as the non-elastic fast path,
+    keeping the fixed-membership HLO bit-identical to pre-resilience
+    code)."""
+    if mask is None:
+        return None
+    mask = tuple(float(m) for m in mask)
+    if len(mask) != n_replicas:
+        raise ValueError(f"membership mask has {len(mask)} entries for "
+                         f"{n_replicas} replicas")
+    if any(m not in (0.0, 1.0) for m in mask):
+        raise ValueError(f"membership mask must be 0/1 valued, got {mask}")
+    if not any(mask):
+        raise ValueError("membership mask has no active replicas")
+    if all(m == 1.0 for m in mask):
+        return None
+    return mask
+
+
+def membership_col(mask: Tuple[float, ...], dtype, ndim: int) -> jnp.ndarray:
+    """The mask as a constant (R, 1, ..., 1) column broadcastable against a
+    rank-`ndim` array with leading replica axis. Multiplying by it zeroes
+    dropped replicas' contributions *before* the axis-0 reduction, so the
+    membership-weighted exchange still lowers to exactly one cross-replica
+    collective per arena (0/1 weights are exact in every wire dtype)."""
+    col = jnp.asarray(mask, dtype)
+    return col.reshape((len(mask),) + (1,) * (ndim - 1))
+
+
+def masked_axis0_mean(arena: jnp.ndarray,
+                      mask: Optional[Tuple[float, ...]]) -> jnp.ndarray:
+    """Membership-weighted mean over the leading replica axis of an arena,
+    kept as a (1, ...) buffer: sum of active rows / n_active, one axis-0
+    `lax.reduce` (the op that lowers to the cross-pod all-reduce). With
+    mask=None this is the plain mean. Computation dtype = arena dtype (the
+    caller has already applied the wire cast)."""
+    r = arena.shape[0]
+    w = arena if mask is None else arena * membership_col(mask, arena.dtype,
+                                                          arena.ndim)
+    inv = 1.0 / (r if mask is None else sum(mask))
+    m = jax.lax.reduce(w, jnp.zeros((), arena.dtype), jax.lax.add, (0,))
+    return (m * jnp.asarray(inv, arena.dtype))[None]
+
+
 # -- wire codecs over an arena -------------------------------------------------
 
 def _check_wire_format(wire_format: str) -> str:

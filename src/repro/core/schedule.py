@@ -16,6 +16,7 @@ detection (paper: "training loss stable for N epochs").
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
@@ -44,8 +45,13 @@ class DasoController:
     _best: float = field(init=False, default=float("inf"))
     _since_improve: int = field(init=False, default=0)
     _win_acc: List[float] = field(init=False, default_factory=list)
+    _dcn_scale: float = field(init=False, default=1.0)
     history: List[Tuple[int, str, int, int]] = field(init=False,
                                                      default_factory=list)
+    # resilience event log: (step, kind, detail) entries appended by the
+    # notify_* hooks (resilience/supervisor.py)
+    events: List[Tuple[int, str, float]] = field(init=False,
+                                                 default_factory=list)
 
     def __post_init__(self):
         self._b = max(1, self.cfg.b_max)
@@ -178,6 +184,65 @@ class DasoController:
             else:
                 self._b = max(1, self._b // 2)             # paper: halve
                 self._w = max(1, self._w // 2)
+
+    # -- resilience hooks --------------------------------------------------
+    def notify_membership_change(self, step: int, n_active: int) -> None:
+        """A replica dropped or rejoined at `step`. The loss scale of a
+        different active set is not comparable to the old one, so the
+        plateau statistics are flushed: the current window is discarded and
+        the best-window baseline restarts (otherwise a crash-induced loss
+        bump would immediately count toward `plateau_patience`). B/W are
+        left alone — the paper schedule keeps adapting from wherever it
+        is."""
+        self._win_acc.clear()
+        self._since_improve = 0
+        self._best = float("inf")
+        self.events.append((step, "membership", float(n_active)))
+
+    def notify_dcn_scale(self, scale: float, *, step: int = -1) -> None:
+        """The cross-pod (DCN) network degraded to `scale`× its nominal
+        bandwidth (scale < 1) or recovered (scale >= 1). Under degradation
+        the controller stretches B — syncing less often keeps the exchange
+        overhead per step bounded, the degraded-network adaptation DS-Sync
+        argues for — capped at 4×`b_max`; on recovery B is clamped back to
+        the paper's `b_max` ceiling. W tracks B at the paper's B/4 rule."""
+        if scale <= 0:
+            raise ValueError(f"dcn scale must be positive, got {scale}")
+        self._dcn_scale = float(scale)
+        b_max = max(1, self.cfg.b_max)
+        if scale < 1.0:
+            stretched = int(math.ceil(b_max / scale))
+            self._b = max(self._b, min(4 * b_max, stretched))
+        else:
+            self._b = min(self._b, b_max)
+        self._w = max(1, self._b // 4)
+        self.events.append((step, "dcn_scale", float(scale)))
+
+    # -- checkpoint state --------------------------------------------------
+    _STATE_FIELDS = ("_b", "_w", "_last_send", "_inflight_since",
+                     "_recv_staleness", "_best", "_since_improve",
+                     "_dcn_scale")
+
+    def state_dict(self) -> dict:
+        """Full mutable state as a JSON-serializable dict (part of the
+        resumable TrainState, checkpoint/io.py). Restoring it via
+        `load_state_dict` makes a resumed controller schedule-identical to
+        one that never stopped — history included, so `global_sync_fraction`
+        and the schedule-equality asserts keep working across a resume."""
+        sd = {k: getattr(self, k) for k in self._STATE_FIELDS}
+        sd["win_acc"] = list(self._win_acc)
+        sd["history"] = [list(h) for h in self.history]
+        sd["events"] = [list(e) for e in self.events]
+        sd["loss_window"] = self.loss_window
+        return sd
+
+    def load_state_dict(self, sd: dict) -> None:
+        for k in self._STATE_FIELDS:
+            setattr(self, k, sd[k])
+        self._win_acc = [float(x) for x in sd["win_acc"]]
+        self.history = [tuple(h) for h in sd["history"]]
+        self.events = [tuple(e) for e in sd.get("events", [])]
+        self.loss_window = int(sd["loss_window"])
 
     # -- audit -------------------------------------------------------------
     def global_sync_fraction(self) -> float:

@@ -44,12 +44,19 @@ class SimResult:
 
 def run_per_step_training(strategy, params0, data_fn: Callable,
                           lr_fn: Callable, n_steps: int, *,
-                          track_divergence: bool = False) -> SimResult:
+                          track_divergence: bool = False,
+                          start_step: int = 0, carry=None,
+                          ckpt_every: int = 0,
+                          ckpt_cb: Optional[Callable] = None) -> SimResult:
     """Reference path: one jitted dispatch per training step, with the
     strategy's per-step mode decision (`next_mode`) and loss feedback
     (`observe`) interleaved exactly as on the original host loop.
-    `strategy` is any registered Strategy (core/executor.py)."""
-    carry = strategy.init_carry(params0)
+    `strategy` is any registered Strategy (core/executor.py).
+
+    Resume/checkpoint surface mirrors `executor.run_compiled_training`:
+    `start_step` + restored `carry` continue a run; `ckpt_cb(completed,
+    carry, losses)` fires after every `ckpt_every`-th step."""
+    carry = strategy.init_carry(params0) if carry is None else carry
     step_cache: Dict = {}
 
     def get_step(mode: str, staleness: int):
@@ -59,7 +66,7 @@ def run_per_step_training(strategy, params0, data_fn: Callable,
         return step_cache[key]
 
     losses, metrics_log, divs = [], [], []
-    for step in range(n_steps):
+    for step in range(start_step, n_steps):
         mode, stale = strategy.next_mode(step)
         fn = get_step(mode, stale)
         carry, m = fn(carry, data_fn(step), lr_fn(step))
@@ -72,6 +79,8 @@ def run_per_step_training(strategy, params0, data_fn: Callable,
             d = strategy.divergence(carry)
             if d is not None:
                 divs.append(d)
+        if ckpt_every and ckpt_cb is not None and (step + 1) % ckpt_every == 0:
+            ckpt_cb(step + 1, carry, losses)
     return SimResult(losses=losses, metrics=metrics_log,
                      params=strategy.finalize_params(carry),
                      sync_fraction=strategy.sync_fraction(),

@@ -9,10 +9,21 @@ executor (core/executor.py) by default: one buffer-donating XLA dispatch per
 controller cycle instead of one per step. `--executor per_step` selects the
 reference path (identical numerics, allclose at f32).
 
+Resilience surface:
+
+  * ``--ckpt DIR --ckpt-every N`` writes a full resumable TrainState
+    (params + optimizer + controller + in-flight exchange) every N steps;
+  * ``--resume DIR/step_XXXXXXXX`` continues such a run with numerics
+    identical to an uninterrupted one;
+  * ``--fault-plan plan.json`` replays a declarative fault plan (node
+    crash / rejoin / straggler / DCN degradation) through the resilience
+    supervisor (resilience/supervisor.py).
+
   python -m repro.launch.train --arch llama3.2-1b --strategy daso \
       --steps 300 --nodes 4 --b-max 4 [--executor macro|per_step] [--full]
 """
 import argparse
+import dataclasses
 import json
 import os
 
@@ -55,18 +66,36 @@ def main():
     ap.add_argument("--per-node-batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seeds both the parameter init PRNGKey and the "
+                         "synthetic data stream")
     ap.add_argument("--full", action="store_true",
                     help="use the full (published) config instead of reduced"
                          " — only sensible on real hardware")
-    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt", default=None,
+                    help="checkpoint directory: final params always land "
+                         "here; with --ckpt-every, periodic TrainStates in "
+                         "step_XXXXXXXX/ subdirs")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="save a full resumable TrainState every N steps "
+                         "(requires --ckpt)")
+    ap.add_argument("--resume", default=None, metavar="STATE_DIR",
+                    help="resume from a TrainState directory written by "
+                         "--ckpt-every; the run continues deterministically")
+    ap.add_argument("--fault-plan", default=None, metavar="PLAN_JSON",
+                    help="replay a declarative fault plan (JSON: crash/"
+                         "rejoin/straggle/degrade_dcn events) through the "
+                         "resilience supervisor; daso-family strategies "
+                         "only")
     ap.add_argument("--metrics-out", default=None)
     args = ap.parse_args()
 
     cfg = get_config(args.arch) if args.full else get_reduced(args.arch)
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(args.seed)
     params0 = init_params(cfg, key)
     loss_fn = make_lm_loss(cfg)
-    src = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq_len, seed=0)
+    src = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                      seed=args.seed)
     R, per = args.nodes, args.per_node_batch
 
     def daso_data(step):
@@ -76,31 +105,97 @@ def main():
     def sync_data(step):
         return src.batch(R * per, step)
 
+    if args.ckpt_every and not args.ckpt:
+        ap.error("--ckpt-every requires --ckpt")
     loop_cfg = TrainLoopConfig(
         strategy=args.strategy, n_steps=args.steps, n_replicas=R,
         local_world=args.local_world, b_max=args.b_max, lr=args.lr,
         executor=args.executor, max_cycle_len=args.max_cycle_len,
-        wire_format=args.wire_format, exchange_impl=args.exchange_impl)
+        wire_format=args.wire_format, exchange_impl=args.exchange_impl,
+        ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt,
+        resume_from=args.resume)
     lr_fn = warmup_linear_scaled(args.lr / (R * args.local_world),
                                  R * args.local_world,
                                  max(1, args.steps // 10))
     data_fn = sync_data if args.strategy == "sync" else daso_data
-    result = run_training(loss_fn, params0, data_fn, loop_cfg, lr_fn=lr_fn)
+
+    report = None
+    if args.fault_plan:
+        if args.strategy == "sync":
+            ap.error("--fault-plan requires a replica-axis strategy "
+                     "(daso / local_sgd)")
+        if args.resume:
+            ap.error("--resume is not supported together with "
+                     "--fault-plan (restart the fault run from step 0)")
+        if args.executor != "macro":
+            ap.error("--fault-plan drives the macro-cycle supervisor; "
+                     "--executor per_step is not supported with it")
+        from repro.checkpoint.io import TrainState, save_train_state
+        from repro.resilience.faults import FaultPlan
+        from repro.resilience.supervisor import run_with_faults
+        from repro.train.loop import build_strategy, ckpt_step_dir
+        from repro.optim.optimizers import sgd
+
+        plan = FaultPlan.from_json(args.fault_plan)
+        plan.validate(R)
+        strategy = build_strategy(loss_fn, loop_cfg,
+                                  sgd(momentum=0.9, weight_decay=1e-4))
+
+        ckpt_cb = None
+        if args.ckpt_every:
+            def ckpt_cb(step, carry, seg_losses):
+                save_train_state(
+                    ckpt_step_dir(args.ckpt, step),
+                    TrainState(
+                        step=step, carry=carry,
+                        controller=strategy.controller.state_dict(),
+                        membership=(list(strategy.membership)
+                                    if strategy.membership is not None
+                                    else None),
+                        strategy=args.strategy, losses=list(seg_losses)))
+
+        report = run_with_faults(strategy, params0, daso_data, lr_fn,
+                                 args.steps, plan,
+                                 ckpt_every=args.ckpt_every,
+                                 ckpt_cb=ckpt_cb)
+        result = report.result
+        print(f"[train] fault plan: {len(plan.events)} events, "
+              f"{report.invalidations} cycle-cache invalidations, "
+              f"simulated_time={report.simulated_time_s:.2f}s")
+        for ev in report.applied:
+            print(f"[train]   step {ev['step']:>5} {ev['kind']:<12} "
+                  f"replica={ev.get('replica')} "
+                  f"handle={ev['handle_s'] * 1e3:.1f}ms "
+                  f"first_cycle={ev['first_cycle_s'] * 1e3:.1f}ms")
+    else:
+        result = run_training(loss_fn, params0, data_fn, loop_cfg,
+                              lr_fn=lr_fn)
     if result.executor_stats is not None:
         s = result.executor_stats
         print(f"[train] executor: {s.dispatches} host dispatches for "
               f"{args.steps} steps ({s.compiles} compiled cycle shapes, "
-              f"{s.fallback_steps} tail-fallback steps)")
+              f"{s.fallback_steps} tail-fallback steps, "
+              f"{s.invalidations} invalidations)")
 
     if args.ckpt:
         save_checkpoint(args.ckpt, result.params, step=args.steps)
         print(f"[train] checkpoint -> {args.ckpt}")
     if args.metrics_out:
         os.makedirs(os.path.dirname(args.metrics_out) or ".", exist_ok=True)
+        metrics = {"losses": result.losses,
+                   "sync_fraction": result.sync_fraction,
+                   "final_loss": result.final_loss,
+                   "seed": args.seed}
+        if result.executor_stats is not None:
+            metrics["executor_stats"] = dataclasses.asdict(
+                result.executor_stats)
+        if report is not None:
+            metrics["resilience"] = {
+                "events": report.applied,
+                "invalidations": report.invalidations,
+                "simulated_time_s": report.simulated_time_s}
         with open(args.metrics_out, "w") as f:
-            json.dump({"losses": result.losses,
-                       "sync_fraction": result.sync_fraction,
-                       "final_loss": result.final_loss}, f)
+            json.dump(metrics, f)
         print(f"[train] metrics -> {args.metrics_out}")
 
 

@@ -1,0 +1,7 @@
+"""Resilience subsystem: elastic replica membership, deterministic fault
+injection, and full-state resume. See docs/architecture.md §Resilience."""
+from repro.resilience.faults import FaultEvent, FaultPlan, KINDS  # noqa: F401
+from repro.resilience.membership import (donor_mean_rows,  # noqa: F401
+                                         reseed_carry)
+from repro.resilience.supervisor import (ResilienceReport,  # noqa: F401
+                                         run_with_faults)

@@ -1,0 +1,60 @@
+"""Elastic-membership carry surgery: re-seeding rejoined replicas.
+
+The exchange-side membership math (masked arena reduction, frozen ghost
+rows, dynamic-P Eq. (1)) lives in core/daso.py + core/flatbuf.py so it
+compiles into the step variants. What lives here is the host-side piece: a
+replica that rejoins after a crash has a stale (frozen) row and must be
+re-seeded from the survivors' merged state before it re-enters the active
+set — the DASO analogue of an elastic-Horovod worker bootstrapping from the
+current consensus parameters.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flatbuf
+
+
+def donor_mean_rows(tree, donor_mask: Tuple[float, ...]):
+    """Membership-weighted mean over the donor rows of every leaf, shape
+    (1, ...) per leaf — the consensus state a joiner bootstraps from.
+    Floating leaves average in their own dtype; integer leaves round."""
+    mask = flatbuf.normalize_membership(donor_mask, len(donor_mask))
+
+    def leaf(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return flatbuf.masked_axis0_mean(x, mask)
+        m = flatbuf.masked_axis0_mean(x.astype(jnp.float32), mask)
+        return jnp.round(m).astype(x.dtype)
+
+    return jax.tree.map(leaf, tree)
+
+
+def reseed_carry(carry, donor_mask: Tuple[float, ...],
+                 joining: Iterable[int]):
+    """Overwrite the rows of `joining` replicas in every carry leaf with
+    the donors' membership-weighted mean. Applied to the whole strategy
+    carry — params, optimizer state (a rejoined node has no momentum
+    history; the donors' mean is the least-surprising bootstrap), and the
+    in-flight exchange buffer — so the joiner is indistinguishable from a
+    replica that just received a blocking sync."""
+    joining = sorted(set(joining))
+    if not joining:
+        return carry
+    n = len(donor_mask)
+    for j in joining:
+        if not 0 <= j < n:
+            raise ValueError(f"joining replica {j} outside 0..{n - 1}")
+        if donor_mask[j]:
+            raise ValueError(f"replica {j} is both donor and joiner")
+    sel = jnp.asarray([i in joining for i in range(n)])
+    means = donor_mean_rows(carry, donor_mask)
+
+    def leaf(x, m):
+        col = sel.reshape((n,) + (1,) * (x.ndim - 1))
+        return jnp.where(col, jnp.broadcast_to(m, x.shape), x)
+
+    return jax.tree.map(leaf, carry, means)

@@ -1,0 +1,177 @@
+"""Resilience supervisor: drives a fault plan end-to-end.
+
+Wraps the compiled macro-cycle executor loop (core/executor.py) with the
+three resilience pillars:
+
+  * **elastic membership** — at a crash/rejoin boundary the supervisor
+    updates the strategy's static membership mask
+    (`DasoStrategy.set_membership`), invalidates the executor's compiled
+    cycle cache (the old programs bake the old exchange weights), and on
+    rejoin re-seeds the joiner's carry rows from the survivors' merged
+    state (resilience/membership.py);
+  * **deterministic fault injection** — cycle plans are cut at fault-plan
+    boundaries, so every event lands between compiled cycles exactly where
+    the plan says, and the controller is notified
+    (`notify_membership_change` / `notify_dcn_scale`) so the B/W schedule
+    adapts;
+  * **full-state checkpointing** — optional periodic TrainState saves, same
+    contract as train/loop.py, so a faulty run is also resumable.
+
+Besides the training result the supervisor reports per-event recovery cost
+(host handling time + the first post-event cycle, which carries the
+recompile) and a simulated wall-clock that charges compute at each step's
+worst active straggler and exchanges at the degraded DCN rate — the numbers
+`benchmarks/resilience.py` turns into BENCH_resilience.json.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.executor import (MacroCycleExecutor, Strategy,
+                                 dispatch_planned_cycle)
+from repro.core.schedule import Mode
+from repro.core.simulator import SimResult
+from repro.resilience.faults import FaultPlan
+from repro.resilience.membership import reseed_carry
+
+# step variants that touch the cross-pod network (charged an exchange on
+# the simulated clock)
+_SYNC_MODES = (Mode.SEND, Mode.SEND_RECEIVE, Mode.BLOCKING, Mode.HARD_AVG)
+
+
+@dataclass
+class ResilienceReport:
+    result: SimResult
+    applied: List[Dict] = field(default_factory=list)  # per-event records
+    invalidations: int = 0
+    simulated_time_s: float = 0.0
+    membership_timeline: List = field(default_factory=list)  # (step, mask)
+
+    def recovery_s(self) -> List[float]:
+        """Per membership event: host handling + first post-event cycle
+        (the recompile)."""
+        return [e["handle_s"] + e["first_cycle_s"] for e in self.applied
+                if e["kind"] in ("crash", "rejoin")]
+
+
+def run_with_faults(strategy: Strategy, params0, data_fn: Callable,
+                    lr_fn: Callable, n_steps: int, plan: FaultPlan, *,
+                    executor: Optional[MacroCycleExecutor] = None,
+                    t_compute_s: float = 0.0,
+                    exchange_cost_fn: Optional[Callable] = None,
+                    ckpt_every: int = 0,
+                    ckpt_cb: Optional[Callable] = None) -> ResilienceReport:
+    """Run `n_steps` of compiled training while replaying `plan`.
+
+    `strategy` must be a replica-axis strategy (daso / local_sgd); its
+    controller receives the notify_* adaptation hooks. `t_compute_s` and
+    `exchange_cost_fn(n_active, dcn_scale) -> seconds` feed the simulated
+    clock (both optional — zero cost models 'numerics only').
+    `ckpt_every`/`ckpt_cb` follow the executor.run_compiled_training
+    contract."""
+    cfg = strategy.cfg
+    if cfg is None:
+        raise ValueError("run_with_faults needs a replica-axis strategy "
+                         "with a DasoConfig (daso / local_sgd)")
+    n_replicas = cfg.n_replicas
+    plan.validate(n_replicas)
+
+    ex = executor or MacroCycleExecutor(strategy)
+    carry = strategy.init_carry(params0)
+    mask = list(plan.membership_at(-1, n_replicas))  # all active
+    slowdowns = [1.0] * n_replicas
+    dcn_scale = 1.0
+
+    report = ResilienceReport(result=None)
+    report.membership_timeline.append((0, tuple(mask)))
+    losses: List[float] = []
+    metrics_log: List[Dict[str, float]] = []
+    sim_time = 0.0
+    pending_first_cycle: List[Dict] = []  # events awaiting recompile timing
+    next_ckpt = ckpt_every if ckpt_every else None
+
+    def apply_event(ev, step):
+        nonlocal carry, dcn_scale
+        t0 = time.perf_counter()
+        rec = {"step": step, "kind": ev.kind, "replica": ev.replica,
+               "factor": ev.factor, "first_cycle_s": 0.0}
+        if ev.kind == "crash":
+            mask[ev.replica] = 0.0
+            strategy.set_membership(mask)
+            ex.invalidate()
+            if strategy.controller is not None:
+                strategy.controller.notify_membership_change(
+                    step, int(sum(mask)))
+            report.membership_timeline.append((step, tuple(mask)))
+            pending_first_cycle.append(rec)
+        elif ev.kind == "rejoin":
+            # re-seed BEFORE flipping the mask: donors are the survivors
+            carry = reseed_carry(carry, tuple(mask), [ev.replica])
+            mask[ev.replica] = 1.0
+            strategy.set_membership(mask)
+            ex.invalidate()
+            if strategy.controller is not None:
+                strategy.controller.notify_membership_change(
+                    step, int(sum(mask)))
+            report.membership_timeline.append((step, tuple(mask)))
+            pending_first_cycle.append(rec)
+        elif ev.kind == "straggle":
+            slowdowns[ev.replica] = ev.factor
+        elif ev.kind == "recover":
+            slowdowns[ev.replica] = 1.0
+        elif ev.kind == "degrade_dcn":
+            dcn_scale = ev.factor
+            if strategy.controller is not None:
+                strategy.controller.notify_dcn_scale(ev.factor, step=step)
+        elif ev.kind == "restore_dcn":
+            dcn_scale = 1.0
+            if strategy.controller is not None:
+                strategy.controller.notify_dcn_scale(1.0, step=step)
+        rec["handle_s"] = time.perf_counter() - t0
+        report.applied.append(rec)
+
+    step = 0
+    while step < n_steps:
+        for ev in plan.events_at(step):
+            apply_event(ev, step)
+        # cut the cycle at the next fault boundary: events must land
+        # between compiled cycles, mirroring the plateau-window cut
+        max_len = min(ex.max_cycle_len, n_steps - step)
+        boundary = plan.next_boundary_after(step)
+        if boundary is not None:
+            max_len = min(max_len, boundary - step)
+        cycle_plan = strategy.plan_cycle(step, max_len)
+        t0 = time.perf_counter()
+        carry, cycle_losses, per_step_metrics = dispatch_planned_cycle(
+            ex, carry, cycle_plan, data_fn, lr_fn, n_steps)
+        cycle_s = time.perf_counter() - t0
+        for rec in pending_first_cycle:
+            rec["first_cycle_s"] = cycle_s
+        pending_first_cycle.clear()
+        # simulated clock: compute gated on the slowest ACTIVE replica,
+        # sync steps charged one exchange at the degraded DCN rate
+        worst = max((s for s, m in zip(slowdowns, mask) if m), default=1.0)
+        sim_time += len(cycle_plan) * t_compute_s * worst
+        if exchange_cost_fn is not None:
+            n_active = int(sum(mask))
+            for mode, _ in cycle_plan.shape:
+                if mode in _SYNC_MODES:
+                    sim_time += exchange_cost_fn(n_active, dcn_scale)
+        losses.extend(cycle_losses)
+        metrics_log.extend(per_step_metrics)
+        strategy.observe(cycle_losses)
+        step += len(cycle_plan)
+        if next_ckpt is not None and ckpt_cb is not None and step >= next_ckpt:
+            ckpt_cb(step, carry, losses)
+            next_ckpt = (step // ckpt_every + 1) * ckpt_every
+
+    report.result = SimResult(losses=losses, metrics=metrics_log,
+                              params=strategy.finalize_params(carry),
+                              sync_fraction=strategy.sync_fraction(),
+                              controller=strategy.controller,
+                              executor_stats=ex.stats)
+    report.invalidations = ex.stats.invalidations
+    report.simulated_time_s = sim_time
+    return report

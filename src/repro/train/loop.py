@@ -1,21 +1,29 @@
 """End-to-end training driver: strategy selection via the registry
-(sync / daso / local_sgd), LR scheduling, metrics, checkpointing. Used by
-launch/train.py, the examples, and the convergence benchmarks.
+(sync / daso / local_sgd), LR scheduling, metrics, and full-state
+checkpointing (`ckpt_every`/`ckpt_dir` save a resumable
+`checkpoint.io.TrainState` — carry, controller schedule state, membership,
+loss trace; `resume_from` continues a run with numerics identical to an
+uninterrupted one, tests/test_resilience.py). Used by launch/train.py, the
+examples, and the convergence benchmarks.
 
 Two execution paths, numerically equivalent (allclose at f32):
 
   * ``executor="macro"`` (default) — the compiled macro-cycle path
     (core/executor.py): one buffer-donating XLA dispatch per controller
-    cycle instead of one per step.
+    cycle instead of one per step. Checkpoints land on cycle boundaries.
   * ``executor="per_step"`` — the reference path (core/simulator.py): one
     dispatch per step, useful for debugging and as the equivalence oracle.
+    Checkpoints land on exact `ckpt_every` multiples.
 """
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass
 from typing import Callable, Optional
 
+from repro.checkpoint.io import (TrainState, load_train_state,
+                                 save_train_state)
 from repro.core.daso import DasoConfig
 from repro.core.executor import (MacroCycleExecutor, list_strategies,
                                  make_strategy, run_compiled_training)
@@ -45,6 +53,12 @@ class TrainLoopConfig:
     # one-collective-per-leaf reference path.
     wire_format: Optional[str] = None
     exchange_impl: str = "fused"
+    # full-state checkpointing: every `ckpt_every` steps (0 = off) a
+    # TrainState lands in `ckpt_dir/step_XXXXXXXX/`; `resume_from` points at
+    # one such directory to continue the run deterministically.
+    ckpt_every: int = 0
+    ckpt_dir: Optional[str] = None
+    resume_from: Optional[str] = None
 
 
 def build_strategy(loss_fn: Callable, cfg: TrainLoopConfig,
@@ -70,27 +84,73 @@ def build_strategy(loss_fn: Callable, cfg: TrainLoopConfig,
                          controller=controller)
 
 
+def ckpt_step_dir(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:08d}")
+
+
 def run_training(loss_fn: Callable, params0, data_fn: Callable,
                  cfg: TrainLoopConfig, *, optimizer: Optional[Optimizer] = None,
                  lr_fn: Optional[Callable] = None,
                  log: Optional[Callable] = print) -> SimResult:
     """data_fn(step) -> batch. For daso/local_sgd strategies the batch must
-    carry the leading replica axis; for sync it is flat."""
+    carry the leading replica axis; for sync it is flat.
+
+    On resume (`cfg.resume_from`), the returned SimResult's loss trace is
+    the *full* run (checkpointed prefix + resumed segment), so downstream
+    reporting (final_loss, metrics JSON) is seamless across restarts."""
     optimizer = optimizer or sgd(momentum=0.9, weight_decay=1e-4)
     lr_fn = lr_fn or constant_lr(cfg.lr)
     if cfg.executor not in ("macro", "per_step"):
         raise ValueError(f"unknown executor {cfg.executor!r}; "
                          "expected 'macro' or 'per_step'")
     strategy = build_strategy(loss_fn, cfg, optimizer)
+
+    start_step, carry, prior_losses = 0, None, []
+    if cfg.resume_from:
+        ts = load_train_state(cfg.resume_from)
+        if ts.strategy != cfg.strategy:
+            raise ValueError(f"checkpoint was written by strategy "
+                             f"{ts.strategy!r}, run requests "
+                             f"{cfg.strategy!r}")
+        start_step, carry = ts.step, ts.carry
+        prior_losses = list(ts.losses)
+        if ts.controller is not None and strategy.controller is not None:
+            strategy.controller.load_state_dict(ts.controller)
+        if ts.membership is not None and hasattr(strategy, "set_membership"):
+            strategy.set_membership(ts.membership)
+        if log is not None:
+            log(f"[train] resumed from {cfg.resume_from} at step "
+                f"{start_step}")
+
+    ckpt_cb = None
+    if cfg.ckpt_every and cfg.ckpt_dir:
+        def ckpt_cb(step, cur_carry, seg_losses):
+            state = TrainState(
+                step=step, carry=cur_carry,
+                controller=(strategy.controller.state_dict()
+                            if strategy.controller is not None else None),
+                membership=(list(strategy.membership)
+                            if getattr(strategy, "membership", None)
+                            is not None else None),
+                strategy=cfg.strategy,
+                losses=prior_losses + seg_losses)
+            save_train_state(ckpt_step_dir(cfg.ckpt_dir, step), state)
+
     t0 = time.time()
     if cfg.executor == "per_step":
-        result = run_per_step_training(strategy, params0, data_fn, lr_fn,
-                                       cfg.n_steps)
+        result = run_per_step_training(
+            strategy, params0, data_fn, lr_fn, cfg.n_steps,
+            start_step=start_step, carry=carry,
+            ckpt_every=cfg.ckpt_every, ckpt_cb=ckpt_cb)
     else:
         executor = MacroCycleExecutor(strategy,
                                       max_cycle_len=cfg.max_cycle_len)
-        result = run_compiled_training(strategy, params0, data_fn, lr_fn,
-                                       cfg.n_steps, executor=executor)
+        result = run_compiled_training(
+            strategy, params0, data_fn, lr_fn, cfg.n_steps,
+            executor=executor, start_step=start_step, carry=carry,
+            ckpt_every=cfg.ckpt_every, ckpt_cb=ckpt_cb)
+    if prior_losses:
+        result.losses = prior_losses + result.losses
     if log is not None:
         dt = time.time() - t0
         stats = result.executor_stats
