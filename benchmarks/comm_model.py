@@ -13,6 +13,12 @@ DASO per-step cost:
 Horovod per-step cost:
   flat all-reduce over 4N GPUs; inter-node links carry the full ring
   (tensor-fusion assumed perfect), fp16 compressed.
+
+The fixed NVLink/IB pair above is the 2-level special case; the N-level
+generalization (`topology_level_costs` / `topology_step_s`, bottom of this
+file) prices one bandwidth/latency term per level of a
+`repro.topo.TopologySpec`, each paid at that level's sync period — the
+numbers behind docs/topologies.md's "which level pays which bytes" table.
 """
 from __future__ import annotations
 
@@ -114,3 +120,84 @@ def reduction_pct(param_bytes_fp32: float, n_nodes: int,
     h = horovod_step_s(param_bytes_fp32, n_nodes, c)
     d = daso_step_s(param_bytes_fp32, n_nodes, c, **daso_kw)
     return 100.0 * (1.0 - d / h)
+
+
+# -- N-level topology model ----------------------------------------------------
+# Generalizes the fixed ICI/DCN pair above: each level of a
+# repro.topo.TopologySpec contributes its own bandwidth/latency term, paid
+# at that level's sync period. docs/topologies.md's "which level pays which
+# bytes" table is generated from these functions (benchmarks/topology.py).
+
+def topology_level_costs(spec, param_bytes_fp32: float, *, b_max: int = 4,
+                         wire_format: str = "bf16",
+                         inner_wire: str = "f32",
+                         int8_block: int = 256,
+                         ib_eff: float = 1.0,
+                         dcn_scale: float = 1.0) -> list:
+    """Per-level cost decomposition of one training step under the
+    per-level sync schedule (repro.topo.lower.derive_inner_periods).
+
+    Returns one dict per level, innermost first:
+
+      * level 0 — the gradient all-reduce over its `fanout` members at its
+        link bandwidth, every step (period 1); payload = f32 gradients.
+      * intermediate levels — a synchronous parameter group average over
+        `fanout` members at `inner_wire`, amortized over the level's
+        period B_l.
+      * outermost level — the fused arena exchange at `wire_format` over
+        its `fanout` members, amortized over b_max, with `ib_eff` (the
+        calibrated MPI/DCN efficiency of `ClusterModel`) and `dcn_scale`
+        (fault-plan degradation) applied to its bandwidth only — the slow
+        tier is where those effects live.
+
+    Keys: name, members, period, wire, bytes_per_sync, bytes_per_step
+    (amortized), sync_s (one exchange), step_s (amortized)."""
+    from repro.topo.lower import derive_inner_periods
+
+    if spec.outer.period is not None:
+        b_max = spec.outer.period  # mirror daso_config_from's override
+    periods = derive_inner_periods(spec, b_max=b_max)
+    rows = []
+    for i, lvl in enumerate(spec.levels):
+        if i == 0:
+            wire, period, bw = "f32", 1, lvl.bandwidth
+        elif i == len(spec.levels) - 1:
+            wire = wire_format
+            period = lvl.period if lvl.period is not None else b_max
+            bw = lvl.bandwidth * ib_eff * dcn_scale
+        else:
+            period = periods.get(lvl.name)
+            if period is None:
+                # degenerate (group-size-1) level: elided from the
+                # schedule, never syncs, contributes no cost row
+                continue
+            wire, bw = inner_wire, lvl.bandwidth
+        nbytes = model_wire_bytes(param_bytes_fp32, wire,
+                                  int8_block=int8_block)
+        sync_s = ring_allreduce_s(nbytes, lvl.fanout, bw,
+                                  latency=lvl.latency)
+        rows.append({"name": lvl.name, "members": lvl.fanout,
+                     "period": period, "wire": wire,
+                     "bytes_per_sync": nbytes,
+                     "bytes_per_step": nbytes / period,
+                     "sync_s": sync_s, "step_s": sync_s / period})
+    return rows
+
+
+def topology_step_s(spec, param_bytes_fp32: float, *,
+                    t_compute_s: float = 0.120,
+                    nonblocking_hidden: float = 0.8,
+                    blocking_frac: float = 0.2,
+                    **level_kw) -> float:
+    """Analytic per-step wall-clock of the N-level schedule: compute +
+    every level's amortized sync term. The outermost level's exchange is
+    non-blocking in the cycling phase (`nonblocking_hidden` of it overlaps
+    compute, like `daso_step_s`); warm-up/cool-down (`blocking_frac` of
+    steps) pay it in full. Inner levels are synchronous — never hidden."""
+    rows = topology_level_costs(spec, param_bytes_fp32, **level_kw)
+    inner_s = sum(r["step_s"] for r in rows[:-1])
+    outer = rows[-1]
+    t_cycling = (t_compute_s + inner_s
+                 + (1 - nonblocking_hidden) * outer["step_s"])
+    t_blocking = t_compute_s + inner_s + outer["sync_s"]
+    return blocking_frac * t_blocking + (1 - blocking_frac) * t_cycling

@@ -1,0 +1,171 @@
+"""Topology sweep benchmark: the N-level sync schedule vs the legacy
+two-level one.
+
+Three measurements, one record (BENCH_topology.json):
+
+  * **equivalence** — lowering the 2-level spec must reproduce the legacy
+    (pre-topology) training run BIT-exactly: param/loss deltas recorded,
+    asserted 0.0 in CI;
+  * **simulator sweep** — real training of the shared tiny MLP under the
+    2-level and 3-level schedules (same seed/data): final losses, per-level
+    sync counts, outermost-sync fraction, wall us/step. The 3-level run
+    shows the schedule trading DCN syncs for cheap mid-tier syncs;
+  * **analytic decomposition** — `comm_model.topology_level_costs` for the
+    docs' worked chip/host/pod example at ResNet-50 scale: which level pays
+    which bytes per step, and the predicted step-time ratio vs the 2-level
+    layout (the "which level pays which bytes" table in docs/topologies.md
+    is this data).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_SCRIPT = """
+import json
+import os
+import time
+import jax, jax.numpy as jnp
+import numpy as np
+
+from repro.core.daso import DasoConfig
+from repro.core.executor import make_strategy, run_compiled_training
+from repro.core.schedule import DasoController
+from repro.optim.optimizers import sgd
+from repro.optim.schedules import constant_lr
+from repro.topo import (TopologySpec, build_topology_strategy,
+                        daso_config_from, derive_inner_periods)
+
+from benchmarks.comm_model import (topology_level_costs, topology_step_s)
+
+QUICK = os.environ.get("BENCH_QUICK") == "1"
+OUT = os.environ.get("BENCH_TOPOLOGY_OUT", "BENCH_topology.json")
+
+R, per, d = 4, 8, 8
+n_steps = 60 if QUICK else 120
+key = jax.random.PRNGKey(0)
+w1 = jax.random.normal(key, (d, 16)) * 0.5
+k1, k2 = jax.random.split(jax.random.fold_in(key, 7))
+params0 = {"w1": jax.random.normal(k1, (d, 16)) * 0.3,
+           "w2": jax.random.normal(k2, (16, 1)) * 0.3}
+
+def loss_fn(params, batch):
+    h = jnp.tanh(batch["x"] @ params["w1"])
+    pred = h @ params["w2"]
+    return jnp.mean((pred - batch["y"]) ** 2), {}
+
+def data_fn(step):
+    k = jax.random.fold_in(key, step)
+    x = jax.random.normal(k, (R, per, d))
+    return {"x": x, "y": jnp.tanh(x @ w1).sum(-1, keepdims=True) * 0.3}
+
+SPEC2 = "chip:4 x pod:4"
+SPEC3 = "chip:4 x host:2 x pod:2"
+
+def run_spec(spec_str):
+    spec = TopologySpec.parse(spec_str)
+    cfg = daso_config_from(spec, warmup_steps=n_steps // 10,
+                           cooldown_steps=n_steps // 10,
+                           total_steps=n_steps)
+    strat = build_topology_strategy(loss_fn, sgd(momentum=0.9,
+                                                 weight_decay=1e-4),
+                                    spec, cfg, loss_window=20)
+    t0 = time.perf_counter()
+    res = run_compiled_training(strat, params0, data_fn, constant_lr(0.1),
+                                n_steps)
+    wall = time.perf_counter() - t0
+    return spec, res, wall
+
+def run_legacy():
+    cfg = DasoConfig(n_replicas=R, global_world=4 * R, b_max=4,
+                     warmup_steps=n_steps // 10,
+                     cooldown_steps=n_steps // 10, total_steps=n_steps)
+    strat = make_strategy("daso", loss_fn,
+                          sgd(momentum=0.9, weight_decay=1e-4), cfg,
+                          controller=DasoController(cfg, loss_window=20))
+    return run_compiled_training(strat, params0, data_fn, constant_lr(0.1),
+                                 n_steps)
+
+legacy = run_legacy()
+spec2, two, wall2 = run_spec(SPEC2)
+spec3, three, wall3 = run_spec(SPEC3)
+
+param_delta = max(float(jnp.max(jnp.abs(a - b)))
+                  for a, b in zip(jax.tree.leaves(two.params),
+                                  jax.tree.leaves(legacy.params)))
+loss_delta = max(abs(a - b) for a, b in zip(two.losses, legacy.losses))
+
+# analytic decomposition at ResNet-50 scale (97.5M params f32)
+PB = 97.5e6 * 4
+spec3_model = TopologySpec.parse("chip:4 x host:4@50e9 x pod:8@25e9")
+spec2_model = TopologySpec.parse("chip:4 x pod:32@25e9")
+rows = topology_level_costs(spec3_model, PB, b_max=4, ib_eff=0.10)
+t3 = topology_step_s(spec3_model, PB, ib_eff=0.10)
+t2 = topology_step_s(spec2_model, PB, ib_eff=0.10)
+# same pair under a 0.25x-degraded DCN (the fault-plan scenario): the
+# hierarchy keeps only 8 members on the slow tier instead of 32, so the
+# degradation hurts the 2-level layout more
+t3_deg = topology_step_s(spec3_model, PB, ib_eff=0.10, dcn_scale=0.25)
+t2_deg = topology_step_s(spec2_model, PB, ib_eff=0.10, dcn_scale=0.25)
+
+derived = {
+    "two_level_param_delta": param_delta,
+    "two_level_loss_delta": loss_delta,
+    "two_level_final_loss": two.final_loss,
+    "three_level_final_loss": three.final_loss,
+    "final_loss_gap_3v2": three.final_loss - two.final_loss,
+    "two_level_sync_fraction": two.sync_fraction,
+    "three_level_sync_fraction": three.sync_fraction,
+    "three_level_sync_counts": three.controller.level_sync_counts(),
+    "three_level_inner_periods": derive_inner_periods(spec3, b_max=4),
+    "us_per_step_two_level": wall2 / n_steps * 1e6,
+    "us_per_step_three_level": wall3 / n_steps * 1e6,
+    "analytic_level_rows": rows,
+    "analytic_step_s_three_level": t3,
+    "analytic_step_s_two_level": t2,
+    "analytic_step_ratio_3v2": t3 / t2,
+    "analytic_step_ratio_3v2_degraded_dcn": t3_deg / t2_deg,
+}
+record = {"benchmark": "topology",
+          "config": {"n_replicas": R, "n_steps": n_steps, "quick": QUICK,
+                     "spec2": spec2.to_str(), "spec3": spec3.to_str(),
+                     "spec2_model": spec2_model.to_str(),
+                     "spec3_model": spec3_model.to_str(),
+                     "param_bytes_model": PB, "b_max": 4},
+          "derived": derived}
+with open(OUT, "w") as f:
+    json.dump(record, f, indent=2)
+print(f"CSV topology_two_level_bitexact {0.0:.1f} "
+      f"param_delta={param_delta} loss_delta={loss_delta}")
+print(f"CSV topology_three_level_train {wall3 / n_steps * 1e6:.1f} "
+      f"final={three.final_loss:.4f} "
+      f"sync_frac={three.sync_fraction:.3f} "
+      f"host_syncs={derived['three_level_sync_counts'].get('host', 0)}")
+print(f"CSV topology_analytic_step_ratio {0.0:.1f} "
+      f"3v2={t3 / t2:.3f} 3v2_degraded_dcn={t3_deg / t2_deg:.3f} "
+      f"json={OUT}")
+"""
+
+
+def emit_rows(emit, *, quick=False):
+    """2-level-vs-legacy bit-exactness + 2-vs-3-level schedule sweep on the
+    single-device simulator + the analytic per-level decomposition. Writes
+    the record to $BENCH_TOPOLOGY_OUT (default ./BENCH_topology.json)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (SRC + os.pathsep
+                         + os.path.join(os.path.dirname(__file__), "..")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env["BENCH_QUICK"] = "1" if quick else "0"
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(_SCRIPT)],
+                       capture_output=True, text=True, timeout=900, env=env)
+    if r.returncode != 0:
+        emit("topology_sweep_FAILED", 0.0, r.stderr[-200:])
+        return
+    for line in r.stdout.splitlines():
+        if line.startswith("CSV "):
+            _, name, us, derived = line.split(" ", 3)
+            emit(name, float(us), derived)

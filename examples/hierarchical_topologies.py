@@ -1,0 +1,91 @@
+"""Hierarchical topologies: the same cluster described as 2 levels vs 3
+levels, trained side by side on the single-device simulator.
+
+The paper's DASO has exactly two tiers: GPUs inside a node (synced every
+step) and nodes on the slow network (synced every B steps). Real clusters
+have more — chips share NVLink, hosts share a rack network, pods share the
+DCN. `repro.topo` makes that hierarchy declarative: a spec string lowers to
+a mesh, a per-level sync schedule (B_l per level, derived from the
+bandwidth ratios), and statically-specialized step variants whose
+collectives hit exactly the levels that sync each step. Here both layouts
+cover the same 16 workers:
+
+  * ``chip:4 x pod:4``           — the legacy 2-level world: 4 replicas,
+    consensus ONLY via the slow outermost exchange every B steps;
+  * ``chip:4 x host:2 x pod:2``  — the 3-level world: the same 4 replicas,
+    but host pairs also average over their fast mid-tier link every
+    B_host steps (derived: 2), between the slow pod exchanges.
+
+Same model, same seed, same data. Watch the mode tokens: the 3-level
+schedule runs ``local+host`` / ``receive+host`` steps — cheap mid-tier
+consensus the 2-level layout simply cannot express. docs/topologies.md
+walks through the lowering model behind this.
+
+  PYTHONPATH=src python examples/hierarchical_topologies.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.topo import TopologySpec, derive_inner_periods
+from repro.train.loop import TrainLoopConfig, run_training
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    d, R, per = 8, 4, 16
+    w_true = jax.random.normal(key, (d, 16)) * 0.5
+    k1, k2 = jax.random.split(jax.random.fold_in(key, 7))
+    params0 = {"w1": jax.random.normal(k1, (d, 16)) * 0.3,
+               "w2": jax.random.normal(k2, (16, 1)) * 0.3}
+
+    def loss_fn(params, batch):
+        h = jnp.tanh(batch["x"] @ params["w1"])
+        pred = h @ params["w2"]
+        return jnp.mean((pred - batch["y"]) ** 2), {}
+
+    def data_fn(step):
+        k = jax.random.fold_in(key, step)
+        x = jax.random.normal(k, (R, per, d))
+        return {"x": x, "y": jnp.tanh(x @ w_true).sum(-1, keepdims=True) * 0.3}
+
+    steps = 200
+    runs = {}
+    for spec_str in ("chip:4 x pod:4", "chip:4 x host:2 x pod:2"):
+        spec = TopologySpec.parse(spec_str)
+        print(f"\n=== {spec_str} ===")
+        print(f"  levels: {[f'{l.name}:{l.fanout}@{l.bandwidth:g}B/s' for l in spec.levels]}")
+        print(f"  R={spec.n_replicas} world={spec.world} "
+              f"inner periods: {derive_inner_periods(spec, b_max=4) or '(none)'}")
+        res = run_training(loss_fn, params0, data_fn, TrainLoopConfig(
+            strategy="daso", n_steps=steps, topology=spec_str,
+            b_max=4, lr=0.1, loss_window=20))
+        runs[spec_str] = res
+        counts = res.controller.level_sync_counts()
+        print(f"  final loss: {res.final_loss:.4f}")
+        print(f"  outermost (DCN) syncs: {counts['_outer']} steps "
+              f"({res.sync_fraction:.0%})")
+        for name, n in counts.items():
+            if name != "_outer":
+                print(f"  {name}-level syncs: {n} steps (fast mid-tier)")
+        seen = []
+        for _, mode, _, _ in res.controller.history:
+            if mode not in seen:
+                seen.append(mode)
+        print(f"  step variants compiled: {seen}")
+
+    two, three = runs.values()
+    print(f"\n3-level vs 2-level final loss: {three.final_loss:.4f} vs "
+          f"{two.final_loss:.4f} at the SAME outermost sync fraction "
+          f"({three.sync_fraction:.0%}) — the mid-tier consensus comes on "
+          f"links the 2-level spec leaves idle.")
+    print("Sweep + analytic per-level byte accounting: "
+          "python -m benchmarks.run --only topology")
+
+
+if __name__ == "__main__":
+    main()

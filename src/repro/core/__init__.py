@@ -10,7 +10,9 @@ from repro.core.daso import (  # noqa: F401
     local_step,
     replicate_params,
 )
-from repro.core.schedule import DasoController, Mode  # noqa: F401
+from repro.core.schedule import (DasoController,  # noqa: F401
+                                 HierDasoController, Mode, join_mode,
+                                 split_mode)
 from repro.core.compression import compress_bf16_roundtrip  # noqa: F401
 # Compiled macro-cycle executor + strategy registry (one XLA dispatch per
 # controller cycle instead of one per step).

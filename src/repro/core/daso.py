@@ -1,46 +1,66 @@
 """DASO core: hierarchical + asynchronous + selective optimization in SPMD JAX.
 
-Layout-agnostic formulation. Every parameter leaf carries a leading *replica*
-axis of size R — one entry per paper "node" (TPU: one per pod; simulator: one
-per virtual node). The per-replica training step runs under vmap; on a mesh
-the replica axis is sharded over "pod", so:
+Layout-agnostic, level-parameterized formulation. Every parameter leaf
+carries a leading *replica* axis of size R — one entry per unit of the
+finest replica level of the cluster topology (repro/topo; in the paper's
+two-level special case, one per node/pod). Inside a replica sits the
+innermost topology tier (the `data` mesh axis); the replica axis itself can
+span any number of outer tiers (host, pod, ...), inner levels varying
+fastest in the replica index. The per-replica training step runs under
+vmap, and syncs hit the levels like this:
 
-  * local sync  — the loss mean over the per-replica batch makes XLA emit a
-    gradient all-reduce over the intra-pod "data" axis only (fast ICI):
-    exactly the paper's node-local NCCL gradient averaging, every step.
-  * global sync — any mean over the leading replica axis lowers to a cross-pod
-    (DCN) all-reduce: exactly the paper's MPI group exchange. It appears in
-    the HLO only in the step variants that perform it. The exchange runs on
-    the fused flat-buffer arena (core/flatbuf.py): the parameter pytree is
-    packed into one contiguous buffer per dtype, so a global sync is ONE
-    cross-pod all-reduce regardless of leaf count (Horovod-style tensor
-    fusion), with the wire tier (f32 | bf16 | int8 block-scaled) applied to
-    the whole arena at once (kernels/comm_kernels.py).
+  * level-0 sync — the loss mean over the per-replica batch makes XLA emit
+    a gradient all-reduce over the intra-replica "data" axis only (fast
+    NVLink/ICI): exactly the paper's node-local NCCL gradient averaging,
+    every step.
+  * inner-level sync — `level_group_mean` averages params over contiguous
+    replica groups of size g_l (all replicas inside one unit of level l): a
+    synchronous tier-l parameter average, one collective per arena spanning
+    exactly that level's mesh axes, every B_l steps (scheduled by
+    `HierDasoController`; absent from 2-level specs).
+  * outermost sync — a mean over the full replica axis lowers to the
+    slowest-tier (cross-pod / DCN) all-reduce: exactly the paper's MPI
+    group exchange. It appears in the HLO only in the step variants that
+    perform it. Every level's exchange runs on the fused flat-buffer arena
+    (core/flatbuf.py): the parameter pytree is packed into one contiguous
+    buffer per dtype, so a sync at any level is ONE collective per arena
+    regardless of leaf count (Horovod-style tensor fusion), with the wire
+    tier (f32 | bf16 | int8 block-scaled) applied to the whole arena at
+    once (kernels/comm_kernels.py).
 
-Step variants (selected by the host-side DasoController, mirroring the MPI
-process flow of paper Fig. 5; static per-variant compilation keeps each HLO's
-collective set exact for the roofline audit):
+Step variants (selected by the host-side controllers in core/schedule.py,
+mirroring the MPI process flow of paper Fig. 5; static per-variant
+compilation keeps each HLO's collective set exact for the roofline audit).
+The outermost level's action is one of:
 
   local     forward/backward + local optimizer step only
-  send      local + snapshot params and start the global exchange:
+  send      local + snapshot params and start the outermost exchange:
             inflight <- mean_replicas(params)
   receive   local + merge the (now stale, S steps old) exchange result via
             paper Eq. (1):  x = (2S * x_local + P * x_stale_mean) / (2S + P)
+            — P generalizes per level as the world size of the level that
+            went stale (the full world for the outermost level)
   blocking  local + synchronous global parameter average with bf16
             transfer compression (warm-up / cool-down phases)
   hard_avg  local + naive parameter overwrite (local-SGD ablation)
 
+and `inner_syncs` on `daso_train_step` adds the synchronous group averages
+of whichever intermediate levels tick that step — empty for the paper's
+two-level layout, which keeps that case's compiled step graph identical to
+the pre-topology build.
+
 Every variant optionally bakes a static elastic-membership mask
-(`membership=` on `daso_train_step`): exchanges become membership-weighted
-means over the active replicas (still one collective per sync), Eq. (1)
-runs with the effective world size, and dropped replicas' rows are frozen
-ghosts until a rejoin re-seeds them (src/repro/resilience/).
+(`membership=` on `daso_train_step`): exchanges at every level become
+membership-weighted means over the active replicas of each group (still one
+collective per sync per level), Eq. (1) runs with the effective world size,
+and dropped replicas' rows are frozen ghosts until a rejoin re-seeds them
+(src/repro/resilience/; fault plans may name whole topology subtrees).
 """
 from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Callable, Optional
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -214,6 +234,74 @@ def replica_mean(tree, wire_dtype=None, *, wire_format=None,
     r = layout.batch_shape[0]
     return jax.tree.map(
         lambda m: jnp.broadcast_to(m, (r,) + m.shape[1:]), mean_tree)
+
+
+def _arena_group_mean(arena, group_size: int, mask=None):
+    """Mean over contiguous replica groups of size `group_size` on one
+    arena: reshape (R, N) -> (R/g, g, N), ONE `lax.reduce` over the group
+    axis, broadcast back. On a topology-lowered mesh the group axis is
+    exactly the syncing level's mesh axes, so this is one tier-l collective
+    per arena — the per-level one-collective contract
+    (tests/test_topology.py).
+
+    `mask` (normalized membership tuple) weights the mean by each group's
+    active rows; a fully-dead group divides by 1 (its rows are frozen
+    ghosts that `freeze_inactive` pins anyway)."""
+    r = arena.shape[0]
+    if group_size == r:
+        return jnp.broadcast_to(flatbuf.masked_axis0_mean(arena, mask),
+                                arena.shape)
+    if r % group_size:
+        raise ValueError(f"replica axis {r} not divisible by group size "
+                         f"{group_size}")
+    g, n_groups = group_size, r // group_size
+    w = arena if mask is None else arena * flatbuf.membership_col(
+        mask, arena.dtype, arena.ndim)
+    wr = jnp.reshape(w, (n_groups, g) + arena.shape[1:])
+    s = jax.lax.reduce(wr, jnp.zeros((), arena.dtype), jax.lax.add, (1,))
+    if mask is None:
+        inv = jnp.asarray(1.0 / g, arena.dtype)
+    else:
+        counts = [max(1.0, sum(mask[i * g:(i + 1) * g]))
+                  for i in range(n_groups)]
+        inv = jnp.asarray([1.0 / c for c in counts], arena.dtype).reshape(
+            (n_groups,) + (1,) * (arena.ndim - 1))
+    m = s * inv
+    return jnp.reshape(
+        jnp.broadcast_to(m[:, None], (n_groups, g) + arena.shape[1:]),
+        arena.shape)
+
+
+def level_group_mean(tree, group_size: int, *, wire_format: str = "f32",
+                     use_kernels: bool = False, mask=None):
+    """Synchronous parameter average over contiguous replica groups of
+    `group_size` — the sync primitive of one intermediate topology level
+    (repro/topo: group_size = prod of replica-level fanouts up to the
+    syncing level, so each group is the set of replicas inside one unit of
+    that level; inner levels vary fastest in the replica index).
+
+    Runs on the fused flat-buffer arenas, one group reduction per arena
+    regardless of leaf count. `wire_format` selects the tier-l transfer
+    dtype ("f32" default — intermediate links are fast; "bf16" for the
+    paper-style 16-bit packaging; int8 is outermost-only). `group_size ==
+    R` degenerates to the full replica mean (= `replica_mean`)."""
+    if wire_format not in ("f32", "bf16"):
+        raise ValueError("level_group_mean supports wire_format 'f32' | "
+                         f"'bf16', got {wire_format!r} (the int8 tier is "
+                         "for the outermost exchange)")
+    layout = flatbuf.build_layout(tree, batch_dims=1)
+    arenas = flatbuf.pack(tree, layout)
+    out = {}
+    for k, a in arenas.items():
+        if not jnp.issubdtype(a.dtype, jnp.floating):
+            w = a.astype(jnp.float32)
+            out[k] = jnp.round(
+                _arena_group_mean(w, group_size, mask)).astype(a.dtype)
+            continue
+        w = (flatbuf.encode_wire(a, "bf16", use_kernels=use_kernels)
+             if wire_format == "bf16" else a)
+        out[k] = _arena_group_mean(w, group_size, mask).astype(a.dtype)
+    return flatbuf.unpack(out, layout)
 
 
 def replica_divergence(params) -> jnp.ndarray:
@@ -394,20 +482,32 @@ MODES = ("local", "send", "receive", "send_receive", "blocking", "hard_avg")
 def daso_train_step(loss_fn: Callable, optimizer: Optimizer, cfg: DasoConfig,
                     *, mode: str, staleness: int = 1,
                     spmd_axis_name: Optional[str] = None, n_micro: int = 1,
-                    membership=None):
+                    membership=None,
+                    inner_syncs: Tuple[Tuple[str, int], ...] = ()):
     """Build one statically-specialized DASO step function.
 
     step(params_R, opt_R, inflight, batch_R, lr)
         -> (params_R, opt_R, inflight, metrics)
 
+    `mode` is the outermost level's action (one of MODES). `inner_syncs`
+    is the step's intermediate-level phase vector: `(level_name,
+    group_size)` pairs, innermost first, for every topology level whose
+    period elapses this step — each adds one synchronous
+    `level_group_mean` over that level's replica groups, applied after the
+    local optimizer step and before the outermost send (so an outer
+    exchange always ships tier-synced values). Empty (the default, and
+    always for 2-level topologies) adds nothing: the compiled graph is the
+    pre-topology one.
+
     `membership` (optional 0/1 mask over the R replicas) bakes elastic
-    membership into the compiled step: exchanges become membership-weighted
-    means over the active set, Eq. (1) runs with the effective world size
-    P_eff = P * n_active / R, dropped replicas' rows are frozen, and the
-    reported loss averages active replicas only. The mask is a *static*
-    constant — a membership change compiles new step variants (the executor
-    invalidates its cycle cache, see resilience/supervisor.py), which keeps
-    the fixed-membership HLO bit-identical to the non-elastic build."""
+    membership into the compiled step: exchanges at every level become
+    membership-weighted means over the active set, Eq. (1) runs with the
+    effective world size P_eff = P * n_active / R, dropped replicas' rows
+    are frozen, and the reported loss averages active replicas only. The
+    mask is a *static* constant — a membership change compiles new step
+    variants (the executor invalidates its cycle cache, see
+    resilience/supervisor.py), which keeps the fixed-membership HLO
+    bit-identical to the non-elastic build."""
     assert mode in MODES, mode
     lstep = local_step(loss_fn, optimizer, spmd_axis_name=spmd_axis_name,
                        n_micro=n_micro)
@@ -418,6 +518,10 @@ def daso_train_step(loss_fn: Callable, optimizer: Optimizer, cfg: DasoConfig,
     n_active = cfg.n_replicas if mask is None else int(sum(mask))
     p_eff = (cfg.global_world if mask is None
              else cfg.global_world * n_active / cfg.n_replicas)
+    for _name, g in inner_syncs:
+        if not 1 < g <= cfg.n_replicas:
+            raise ValueError(f"inner sync {_name!r}: group size {g} outside "
+                             f"2..{cfg.n_replicas}")
 
     def step(params, opt_state, inflight, batch, lr):
         if mode in ("receive", "send_receive"):
@@ -430,6 +534,10 @@ def daso_train_step(loss_fn: Callable, optimizer: Optimizer, cfg: DasoConfig,
             new_p = freeze_inactive(new_p, params, mask)
             new_o = freeze_inactive(new_o, opt_state, mask)
         params, opt_state = new_p, new_o
+        for _name, g in inner_syncs:
+            params = freeze_inactive(
+                level_group_mean(params, g, use_kernels=kern, mask=mask),
+                params, mask)
         if mode in ("send", "send_receive"):
             inflight = global_send(
                 params, wire_format=cfg.wire_format_for(blocking=False),

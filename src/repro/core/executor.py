@@ -21,10 +21,14 @@ buffer-donating program:
   * irregular tail cycles (a shape that would be compiled for a single use
     at the end of training) fall back to the existing per-step path.
 
-Strategies (``sync`` / ``daso`` / ``local_sgd``) register here behind a
-common *plan -> compiled-program* interface: each provides its carry pytree,
-its per-(mode, staleness) step builder, and its cycle planner. The executor
-is strategy-agnostic; `core/simulator.py` reuses the same interface for the
+Strategies (``sync`` / ``daso`` / ``local_sgd``, plus ``hier_daso`` from
+repro/topo) register here behind a common *plan -> compiled-program*
+interface: each provides its carry pytree, its per-(mode, staleness) step
+builder, and its cycle planner. Mode tokens are opaque strings to the
+executor — under an N-level topology they carry the per-level phase vector
+(``"send+host"``), so a cycle shape IS the vector of per-level phases and
+the executor needs no topology awareness. The executor is
+strategy-agnostic; `core/simulator.py` reuses the same interface for the
 per-step reference path that the equivalence tests compare against
 (see tests/test_executor.py: macro path == step path, allclose at f32).
 """
@@ -213,11 +217,17 @@ class DasoStrategy(Strategy):
                else self._membership.index(1.0))
         return dereplicate_params(carry[0], index=idx)
 
+    def _build_raw(self, mode, staleness):
+        """Hook for subclasses that enrich the step build (HierDasoStrategy
+        splits hierarchical mode tokens and adds inner-level syncs); the
+        carry-unpacking wrapper in `build_step` stays shared."""
+        return daso_train_step(self.loss_fn, self.optimizer, self.cfg,
+                               mode=mode, staleness=staleness,
+                               n_micro=self.n_micro,
+                               membership=self._membership)
+
     def build_step(self, mode, staleness):
-        raw = daso_train_step(self.loss_fn, self.optimizer, self.cfg,
-                              mode=mode, staleness=staleness,
-                              n_micro=self.n_micro,
-                              membership=self._membership)
+        raw = self._build_raw(mode, staleness)
 
         def step(carry, batch, lr):
             params, opt_state, inflight = carry

@@ -1,7 +1,7 @@
-"""Host-side DASO controller: phases (warm-up / cycling / cool-down) and the
-selective B/W schedule (paper §3).
+"""Host-side DASO controllers: phases (warm-up / cycling / cool-down), the
+selective B/W schedule (paper §3), and its N-level generalization.
 
-Cycling rules from the paper:
+Cycling rules from the paper (driving the *outermost* topology level):
   * B (batches between global syncs) starts at b_max (paper uses 4);
   * W (batches to wait for the exchange) starts at max(1, B/4) — "an initial
     value of B/4 was found empirically to perform best";
@@ -9,16 +9,24 @@ Cycling rules from the paper:
   * when B == W == 1 and the loss plateaus again, both reset to their initial
     values and the process repeats until cool-down.
 
-The controller is pure host logic: given the step index it returns which
+`DasoController` is that paper schedule verbatim — the two-level world where
+the only replica level is the outermost one. `HierDasoController` extends it
+to an N-level topology (repro/topo): each *intermediate* replica level l
+carries a fixed period B_l and gets a synchronous group sync every B_l
+steps, appended to the step's mode as ``outer+lvl1,lvl2`` (see `join_mode`);
+the plateau schedule keeps driving only the outermost level — the slow tier
+is where adaptivity pays, the fast tiers just tick.
+
+Controllers are pure host logic: given the step index they return which
 statically-compiled step variant to run (mirroring the MPI-side decisions an
-HeAT/DASO rank makes), and consumes windowed loss averages for plateau
+HeAT/DASO rank makes), and consume windowed loss averages for plateau
 detection (paper: "training loss stable for N epochs").
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.daso import DasoConfig
 
@@ -30,6 +38,22 @@ class Mode:
     SEND_RECEIVE = "send_receive"
     BLOCKING = "blocking"
     HARD_AVG = "hard_avg"
+
+
+def split_mode(mode: str) -> Tuple[str, Tuple[str, ...]]:
+    """Split a (possibly hierarchical) mode token into the outermost-level
+    action and the inner levels syncing that step: ``"send+host"`` ->
+    ``("send", ("host",))``, ``"local"`` -> ``("local", ())``. Legacy
+    two-level mode strings pass through unchanged."""
+    outer, _, inner = mode.partition("+")
+    return outer, tuple(inner.split(",")) if inner else ()
+
+
+def join_mode(outer: str, inner: Tuple[str, ...]) -> str:
+    """Inverse of `split_mode`. With no inner syncs the token IS the legacy
+    outer mode string — a 2-level topology therefore produces byte-identical
+    mode histories and cycle shapes to the pre-topology controller."""
+    return f"{outer}+{','.join(inner)}" if inner else outer
 
 
 @dataclass
@@ -246,10 +270,78 @@ class DasoController:
 
     # -- audit -------------------------------------------------------------
     def global_sync_fraction(self) -> float:
-        """Fraction of steps that touched the cross-pod network (for the
-        traffic-reduction claim)."""
+        """Fraction of steps that touched the outermost-level (cross-pod /
+        DCN) network, for the traffic-reduction claim. Hierarchical mode
+        tokens count by their outer action — inner-level syncs ride faster
+        links and are tallied separately (`level_sync_counts`)."""
         if not self.history:
             return 0.0
         touched = sum(1 for (_, m, _, _) in self.history
-                      if m in (Mode.SEND, Mode.SEND_RECEIVE, Mode.BLOCKING))
+                      if split_mode(m)[0] in (Mode.SEND, Mode.SEND_RECEIVE,
+                                              Mode.BLOCKING))
         return touched / len(self.history)
+
+    def level_sync_counts(self) -> Dict[str, int]:
+        """Per-level sync tally over the history: how many steps synced each
+        inner level, plus the outermost under key "_outer". The docs'
+        which-level-pays-which-bytes accounting reads from this
+        (docs/topologies.md)."""
+        counts: Dict[str, int] = {"_outer": 0}
+        for (_, m, _, _) in self.history:
+            outer, inner = split_mode(m)
+            if outer in (Mode.SEND, Mode.SEND_RECEIVE, Mode.BLOCKING,
+                         Mode.HARD_AVG):
+                counts["_outer"] += 1
+            for name in inner:
+                counts[name] = counts.get(name, 0) + 1
+        return counts
+
+
+@dataclass
+class HierDasoController(DasoController):
+    """N-level generalization of the paper schedule (repro/topo).
+
+    `inner_periods` maps each intermediate replica level's name to its
+    fixed sync period B_l (innermost first; derived from the topology's
+    bandwidth ratios by `repro.topo.lower.derive_inner_periods` unless the
+    spec pins it with ``%period``). Level l gets a synchronous group
+    average on every step where ``(step + 1) % B_l == 0`` during the
+    cycling phase; warm-up/cool-down `blocking` steps and the local-SGD
+    `hard_avg` already average the full world, so inner syncs are elided
+    there (they would be no-ops on already-equal rows).
+
+    The outermost level keeps the full paper treatment — plateau-driven
+    B/W, non-blocking send/receive, Eq. (1) staleness merge — via the
+    inherited `DasoController` logic. With no intermediate levels (a
+    2-level topology) this class is behaviorally identical to its base:
+    same mode strings, same history, same cycle shapes."""
+    inner_periods: Dict[str, int] = field(default_factory=dict)
+
+    def __post_init__(self):
+        super().__post_init__()
+        for name, period in self.inner_periods.items():
+            if period < 1:
+                raise ValueError(f"inner level {name!r}: period must be "
+                                 f">= 1, got {period}")
+
+    def inner_syncs_at(self, step: int) -> Tuple[str, ...]:
+        """Names of the intermediate levels whose period elapses at `step`
+        (pure — a static function of the step index, which is what lets
+        compiled macro-cycles bake the per-level phases into their
+        shapes)."""
+        return tuple(name for name, period in self.inner_periods.items()
+                     if (step + 1) % period == 0)
+
+    def mode_for_step(self, step: int) -> Tuple[str, int]:
+        outer, stale = super().mode_for_step(step)
+        if outer in (Mode.BLOCKING, Mode.HARD_AVG):
+            return outer, stale
+        inner = self.inner_syncs_at(step)
+        if not inner:
+            return outer, stale
+        mode = join_mode(outer, inner)
+        # rewrite the history entry the base class just appended so the
+        # recorded schedule names the full per-level phase vector
+        s, _, b, w = self.history[-1]
+        self.history[-1] = (s, mode, b, w)
+        return mode, stale

@@ -90,8 +90,14 @@ def classify_axis(group: Optional[List[int]], mesh_shape: Dict[str, int]
     return "mixed"
 
 
-def collective_stats(hlo_text: str, mesh_shape: Dict[str, int]):
-    """Returns {(kind, axis): {"bytes": int, "count": int}} plus totals."""
+def collective_stats(hlo_text: str, mesh_shape: Dict[str, int],
+                     min_bytes: int = 0):
+    """Returns {(kind, axis): {"bytes": int, "count": int}} plus totals.
+
+    `min_bytes` drops individual ops below that result size *before*
+    aggregating — the per-level one-collective contract tests use it to
+    count parameter-scale exchanges exactly, without scalar metric
+    reductions (loss means) polluting the per-axis counts."""
     stats = defaultdict(lambda: {"bytes": 0, "count": 0})
     # one HLO instruction per line in optimized dumps
     for line in hlo_text.splitlines():
@@ -105,6 +111,8 @@ def collective_stats(hlo_text: str, mesh_shape: Dict[str, int]):
             continue  # bytes counted at the -start op
         shape_str, kind = m.group(1), m.group(2)
         nbytes = _shape_bytes(shape_str)
+        if nbytes < min_bytes:
+            continue
         rg = re.search(r"replica_groups=(\{\{[0-9,{} ]+\}\}|\[[^\]]+\]"
                        r"<=\[[0-9,]+\](?:T\([0-9,]+\))?)", line)
         axis = "unknown"

@@ -1,7 +1,12 @@
 """Production meshes. TPU v5e target: one pod = 256 chips as (data=16,
-model=16); multi-pod adds a leading DCN "pod" axis (the DASO global axis).
+model=16); multi-pod adds a leading "pod" axis — in topology terms
+(repro/topo) that is the 2-level ``data x pod`` layout, with "pod" the
+outermost (DASO-async) replica level. `make_topology_mesh` lowers an
+arbitrary N-level `TopologySpec` to a mesh with one axis per level, so
+syncs at level l produce collectives spanning exactly that level's axis
+(the per-level HLO contract, tests/test_topology.py).
 
-A function, not a module constant: importing this module must never touch
+Functions, not module constants: importing this module must never touch
 jax device state (smoke tests see 1 CPU device)."""
 from __future__ import annotations
 
@@ -17,6 +22,21 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(n_pods: int = 2, data: int = 2, model: int = 2):
     """Small mesh for multi-device CPU tests (XLA host platform devices)."""
     return jax.make_mesh((n_pods, data, model), ("pod", "data", "model"))
+
+
+def make_topology_mesh(spec, model: int = 1):
+    """Lower a `repro.topo.TopologySpec` to a JAX mesh: one axis per
+    topology level, outermost level first (major-to-minor device order
+    matches the replica-index layout: inner levels vary fastest), plus a
+    trailing "model" axis for tensor parallelism inside level 0.
+
+    The replica axis of the training arrays shards over ALL replica-level
+    axes at once (``PartitionSpec((outer_name, ..., inner_name))``), which
+    is what makes a level-l group mean lower to an all-reduce whose
+    replica groups span exactly the axes of levels <= l."""
+    shape = spec.mesh_shape() + (model,)
+    axes = spec.mesh_axis_names() + ("model",)
+    return jax.make_mesh(shape, axes)
 
 
 # -- hardware constants (TPU v5e) used by the roofline analysis -------------

@@ -60,9 +60,17 @@ def main():
                          "per_leaf = legacy reference path")
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--nodes", type=int, default=4,
-                    help="DASO replicas (paper nodes / pods)")
+                    help="DASO replicas (paper nodes / pods); superseded "
+                         "by --topology when given")
     ap.add_argument("--local-world", type=int, default=4)
     ap.add_argument("--b-max", type=int, default=4)
+    ap.add_argument("--topology", default=None, metavar="SPEC",
+                    help="explicit N-level cluster topology (repro/topo): "
+                         "a spec string like 'chip:4 x host:2 x pod:2', "
+                         "inline JSON, or a JSON file path. Replica count "
+                         "and world size derive from the level fanouts; "
+                         ">2-level specs run the hier_daso per-level sync "
+                         "schedule (docs/topologies.md)")
     ap.add_argument("--per-node-batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--lr", type=float, default=0.05)
@@ -96,6 +104,21 @@ def main():
     loss_fn = make_lm_loss(cfg)
     src = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
                       seed=args.seed)
+    spec = None
+    if args.topology:
+        if args.strategy not in ("daso", "hier_daso"):
+            ap.error("--topology drives the daso family "
+                     "(daso / hier_daso)")
+        from repro.topo import TopologySpec, derive_inner_periods
+        spec = TopologySpec.load(args.topology)
+        args.nodes, args.local_world = spec.n_replicas, spec.local_world
+        # a %period on the outermost level overrides --b-max (exactly as
+        # build_strategy's lowering does), so log the schedule that runs
+        b_eff = (spec.outer.period if spec.outer.period is not None
+                 else args.b_max)
+        print(f"[train] topology: {spec.to_str()} -> R={spec.n_replicas} "
+              f"world={spec.world} inner_periods="
+              f"{derive_inner_periods(spec, b_max=b_eff)}")
     R, per = args.nodes, args.per_node_batch
 
     def daso_data(step):
@@ -109,7 +132,11 @@ def main():
         ap.error("--ckpt-every requires --ckpt")
     loop_cfg = TrainLoopConfig(
         strategy=args.strategy, n_steps=args.steps, n_replicas=R,
-        local_world=args.local_world, b_max=args.b_max, lr=args.lr,
+        local_world=args.local_world, b_max=args.b_max,
+        # canonical string from the spec parsed above — the strategy must
+        # train on exactly the topology R/data shapes were derived from,
+        # even if --topology named a file that changes under us
+        topology=spec.to_str() if spec is not None else None, lr=args.lr,
         executor=args.executor, max_cycle_len=args.max_cycle_len,
         wire_format=args.wire_format, exchange_impl=args.exchange_impl,
         ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt,
@@ -137,6 +164,8 @@ def main():
         from repro.optim.optimizers import sgd
 
         plan = FaultPlan.from_json(args.fault_plan)
+        if spec is not None:
+            plan = plan.resolve(spec)  # topology-node events -> replicas
         plan.validate(R)
         strategy = build_strategy(loss_fn, loop_cfg,
                                   sgd(momentum=0.9, weight_decay=1e-4))

@@ -1,5 +1,6 @@
 """Resilience subsystem: elastic replica membership, deterministic fault
-injection, and full-state resume. See docs/architecture.md §Resilience."""
+injection (replica- or topology-node-addressed), and full-state resume.
+See docs/architecture.md §Resilience and docs/topologies.md §Faults."""
 from repro.resilience.faults import FaultEvent, FaultPlan, KINDS  # noqa: F401
 from repro.resilience.membership import (donor_mean_rows,  # noqa: F401
                                          reseed_carry)

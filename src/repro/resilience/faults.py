@@ -19,16 +19,27 @@ Event kinds (all applied host-side, *before* the step they are indexed at):
                staleness weighting); the supervisor charges the slowdown to
                the simulated clock.
   recover      replica `replica` returns to nominal speed.
-  degrade_dcn  the cross-pod network drops to `factor`× nominal bandwidth
-               (0 < factor <= 1). The controller stretches B in response
-               (schedule.py::notify_dcn_scale) and the simulated clock
-               charges exchanges at the degraded rate.
+  degrade_dcn  the outermost-level (cross-pod) network drops to `factor`×
+               nominal bandwidth (0 < factor <= 1). The controller
+               stretches B in response (schedule.py::notify_dcn_scale) and
+               the simulated clock charges exchanges at the degraded rate.
   restore_dcn  DCN bandwidth back to nominal.
+
+Replica-addressed kinds may name a *topology node* instead of a replica
+index (`node` instead of `replica`): a "/"-joined path like ``"pod1"`` or
+``"pod1/host0"`` into an N-level `repro.topo.TopologySpec`. The event then
+covers every replica in that subtree — crashing a pod takes all of its
+hosts down in one scripted event. Node events are symbolic until
+`FaultPlan.resolve(spec)` expands them against a concrete topology
+(``launch/train.py --topology --fault-plan`` does this automatically);
+`validate` rejects unresolved plans.
 
 JSON wire format (FaultPlan.from_json / to_json):
 
     {"events": [{"step": 10, "kind": "crash", "replica": 3},
                 {"step": 30, "kind": "rejoin", "replica": 3},
+                {"step": 40, "kind": "straggle", "node": "pod1",
+                 "factor": 2.0},
                 {"step": 12, "kind": "degrade_dcn", "factor": 0.25}]}
 """
 from __future__ import annotations
@@ -48,6 +59,9 @@ class FaultEvent:
     step: int
     kind: str
     replica: Optional[int] = None
+    # topology-node path ("pod1", "pod1/host0", ...) — the symbolic
+    # alternative to `replica`; expanded by FaultPlan.resolve(spec)
+    node: Optional[str] = None
     factor: float = 1.0
 
     def __post_init__(self):
@@ -56,8 +70,13 @@ class FaultEvent:
                              f"expected one of {KINDS}")
         if self.step < 0:
             raise ValueError(f"fault step must be >= 0, got {self.step}")
-        if self.kind in _REPLICA_KINDS and self.replica is None:
-            raise ValueError(f"{self.kind!r} event needs a replica index")
+        if self.kind in _REPLICA_KINDS and \
+                (self.replica is None) == (self.node is None):
+            raise ValueError(f"{self.kind!r} event needs exactly one of a "
+                             "replica index or a topology node path")
+        if self.kind not in _REPLICA_KINDS and self.node is not None:
+            raise ValueError(f"{self.kind!r} event does not address a "
+                             "node (it is cluster-wide)")
         if self.kind == "straggle" and self.factor < 1.0:
             raise ValueError(f"straggle factor is a slowdown multiplier "
                              f">= 1, got {self.factor}")
@@ -71,9 +90,12 @@ class FaultPlan:
     events: Tuple[FaultEvent, ...] = ()
 
     def __post_init__(self):
-        object.__setattr__(self, "events",
-                           tuple(sorted(self.events,
-                                        key=lambda e: (e.step, e.kind))))
+        object.__setattr__(
+            self, "events",
+            tuple(sorted(self.events,
+                         key=lambda e: (e.step, e.kind,
+                                        -1 if e.replica is None
+                                        else e.replica, e.node or ""))))
 
     # -- construction / serialization --------------------------------------
     @classmethod
@@ -94,6 +116,25 @@ class FaultPlan:
         return json.dumps({"events": [
             {k: v for k, v in asdict(e).items() if v is not None}
             for e in self.events]}, indent=1)
+
+    def resolve(self, spec) -> "FaultPlan":
+        """Expand topology-node events against a concrete
+        `repro.topo.TopologySpec`: each node-addressed event becomes one
+        per-replica event per replica in the node's subtree (same step /
+        kind / factor). Replica-addressed events pass through; the result
+        is fully concrete and `validate`-able. Crashing a node that
+        contains an already-crashed replica is rejected by `validate`,
+        exactly as the equivalent scripted per-replica crashes would
+        be."""
+        out: List[FaultEvent] = []
+        for e in self.events:
+            if e.node is None:
+                out.append(e)
+                continue
+            for r in spec.replicas_of(e.node):
+                out.append(FaultEvent(step=e.step, kind=e.kind, replica=r,
+                                      factor=e.factor))
+        return FaultPlan(tuple(out))
 
     # -- queries ------------------------------------------------------------
     def boundaries(self) -> List[int]:
@@ -151,6 +192,10 @@ class FaultPlan:
         one, or leaving zero survivors at any point."""
         alive = [True] * n_replicas
         for e in self.events:
+            if e.node is not None:
+                raise ValueError(
+                    f"event {e} addresses topology node {e.node!r}; call "
+                    "plan.resolve(topology_spec) before validate/replay")
             if e.replica is not None and not 0 <= e.replica < n_replicas:
                 raise ValueError(f"event {e} addresses replica "
                                  f"{e.replica} outside 0..{n_replicas - 1}")

@@ -31,13 +31,15 @@ from typing import Callable, Dict, List, Optional
 
 from repro.core.executor import (MacroCycleExecutor, Strategy,
                                  dispatch_planned_cycle)
-from repro.core.schedule import Mode
+from repro.core.schedule import Mode, split_mode
 from repro.core.simulator import SimResult
 from repro.resilience.faults import FaultPlan
 from repro.resilience.membership import reseed_carry
 
-# step variants that touch the cross-pod network (charged an exchange on
-# the simulated clock)
+# outermost-level actions that touch the cross-pod network (charged an
+# exchange on the simulated clock; hierarchical mode tokens are split to
+# their outer action first — intermediate-level syncs ride faster links and
+# are not charged at the DCN rate)
 _SYNC_MODES = (Mode.SEND, Mode.SEND_RECEIVE, Mode.BLOCKING, Mode.HARD_AVG)
 
 
@@ -61,21 +63,29 @@ def run_with_faults(strategy: Strategy, params0, data_fn: Callable,
                     executor: Optional[MacroCycleExecutor] = None,
                     t_compute_s: float = 0.0,
                     exchange_cost_fn: Optional[Callable] = None,
+                    topo=None,
                     ckpt_every: int = 0,
                     ckpt_cb: Optional[Callable] = None) -> ResilienceReport:
     """Run `n_steps` of compiled training while replaying `plan`.
 
-    `strategy` must be a replica-axis strategy (daso / local_sgd); its
-    controller receives the notify_* adaptation hooks. `t_compute_s` and
-    `exchange_cost_fn(n_active, dcn_scale) -> seconds` feed the simulated
-    clock (both optional — zero cost models 'numerics only').
-    `ckpt_every`/`ckpt_cb` follow the executor.run_compiled_training
-    contract."""
+    `strategy` must be a replica-axis strategy (daso / hier_daso /
+    local_sgd); its controller receives the notify_* adaptation hooks.
+    `t_compute_s` and `exchange_cost_fn(n_active, dcn_scale) -> seconds`
+    feed the simulated clock (both optional — zero cost models 'numerics
+    only'). `topo` (a `repro.topo.TopologySpec`) resolves plans whose
+    events name topology nodes ("pod1", "pod1/host0") into the per-replica
+    events of those subtrees; without it such plans are rejected by
+    `validate`. `ckpt_every`/`ckpt_cb` follow the
+    executor.run_compiled_training contract."""
     cfg = strategy.cfg
     if cfg is None:
         raise ValueError("run_with_faults needs a replica-axis strategy "
-                         "with a DasoConfig (daso / local_sgd)")
+                         "with a DasoConfig (daso / hier_daso / local_sgd)")
     n_replicas = cfg.n_replicas
+    if topo is None:
+        topo = getattr(strategy, "topo", None)
+    if topo is not None:
+        plan = plan.resolve(topo)
     plan.validate(n_replicas)
 
     ex = executor or MacroCycleExecutor(strategy)
@@ -157,7 +167,7 @@ def run_with_faults(strategy: Strategy, params0, data_fn: Callable,
         if exchange_cost_fn is not None:
             n_active = int(sum(mask))
             for mode, _ in cycle_plan.shape:
-                if mode in _SYNC_MODES:
+                if split_mode(mode)[0] in _SYNC_MODES:
                     sim_time += exchange_cost_fn(n_active, dcn_scale)
         losses.extend(cycle_losses)
         metrics_log.extend(per_step_metrics)

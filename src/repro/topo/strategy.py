@@ -1,0 +1,63 @@
+"""`hier_daso`: the N-level topology strategy.
+
+Registered in the same strategy registry as `daso`/`sync`/`local_sgd`
+(core/executor.py), so both executors, the train loop, the launcher, and
+the resilience supervisor drive it through the common plan -> program
+interface with zero special-casing. The only deltas vs `DasoStrategy`:
+
+  * the controller is a `HierDasoController`, so cycle shapes carry the
+    per-level phase vector (mode tokens like ``"send+host"`` — still plain
+    strings, so the executor's shape-keyed compile cache, the history
+    records, and the checkpoint format are unchanged);
+  * `build_step` splits the token and bakes the syncing levels'
+    `level_group_mean` calls into the step variant (`inner_syncs` on
+    `daso_train_step`), each one collective per arena over exactly that
+    level's replica groups.
+
+With a 2-level topology there are no intermediate levels, every token is a
+legacy mode string, and this class builds byte-identical step functions to
+`DasoStrategy` — but `repro.topo.lower.build_topology_strategy` returns the
+stock `DasoStrategy` for that case anyway.
+"""
+from __future__ import annotations
+
+from repro.core.daso import daso_train_step
+from repro.core.executor import DasoStrategy, register_strategy
+from repro.core.schedule import HierDasoController, split_mode
+from repro.topo.spec import TopologySpec
+
+
+@register_strategy("hier_daso")
+class HierDasoStrategy(DasoStrategy):
+    """Paper strategy generalized to an explicit N-level topology: the
+    outermost level keeps the plateau-driven asynchronous send/receive
+    exchange, intermediate levels get synchronous group syncs every B_l
+    steps, level 0 stays the per-step gradient all-reduce."""
+
+    def __init__(self, loss_fn, optimizer, cfg, *, topo: TopologySpec,
+                 controller=None, **kw):
+        if cfg is not None and cfg.n_replicas != topo.n_replicas:
+            raise ValueError(
+                f"DasoConfig.n_replicas={cfg.n_replicas} does not match "
+                f"the topology's {topo.n_replicas}")
+        if controller is None:
+            from repro.topo.lower import make_controller
+            controller = make_controller(topo, cfg)
+        if not isinstance(controller, HierDasoController) \
+                and topo.n_levels > 2:
+            raise ValueError("a >2-level topology needs a "
+                             "HierDasoController (repro.topo.lower."
+                             "make_controller builds one)")
+        super().__init__(loss_fn, optimizer, cfg, controller=controller,
+                         **kw)
+        self.topo = topo
+
+    def _build_raw(self, mode, staleness):
+        outer, inner = split_mode(mode)
+        inner_syncs = tuple((name, self.topo.group_size(name))
+                            for name in inner)
+        return daso_train_step(self.loss_fn, self.optimizer, self.cfg,
+                               mode=outer, staleness=staleness,
+                               n_micro=self.n_micro,
+                               membership=self._membership,
+                               inner_syncs=inner_syncs)

@@ -35,11 +35,18 @@ from repro.optim.schedules import constant_lr
 
 @dataclass
 class TrainLoopConfig:
-    strategy: str = "daso"            # any registered name: daso|sync|local_sgd
+    strategy: str = "daso"            # registered name: daso|hier_daso|sync|...
     n_steps: int = 200
     n_replicas: int = 4               # paper "nodes"
     local_world: int = 4              # paper GPUs-per-node (data-axis size)
     b_max: int = 4
+    # explicit N-level cluster topology (repro/topo): a spec string
+    # ("chip:4 x host:2 x pod:2"), inline JSON, or a JSON file path. When
+    # set it *supersedes* n_replicas/local_world (derived from the level
+    # fanouts) and selects the per-level sync schedule: 2-level specs
+    # lower to the stock daso strategy (bit-exact with the legacy path),
+    # deeper specs to hier_daso. Only meaningful for the daso family.
+    topology: Optional[str] = None
     warmup_frac: float = 0.1          # paper: warm-up epochs -> step fraction
     cooldown_frac: float = 0.1
     lr: float = 0.05
@@ -61,24 +68,58 @@ class TrainLoopConfig:
     resume_from: Optional[str] = None
 
 
+def resolve_topology(cfg: TrainLoopConfig):
+    """The `TopologySpec` of this run, or None when cfg.topology is unset.
+    Validates that the strategy is topology-capable."""
+    if cfg.topology is None:
+        return None
+    if cfg.strategy not in ("daso", "hier_daso"):
+        raise ValueError(f"topology specs drive the daso family; strategy "
+                         f"{cfg.strategy!r} does not take one")
+    from repro.topo import TopologySpec
+    return TopologySpec.load(cfg.topology)
+
+
 def build_strategy(loss_fn: Callable, cfg: TrainLoopConfig,
                    optimizer: Optimizer):
     """Resolve cfg.strategy through the registry into a Strategy instance
-    (with its DasoConfig + controller for the replica-axis strategies)."""
+    (with its DasoConfig + controller for the replica-axis strategies).
+    With cfg.topology set, the instance is lowered from the spec instead
+    (repro.topo.lower.build_topology_strategy): replica count and world
+    size come from the level fanouts, intermediate levels get their
+    per-level sync periods, and the plateau controller drives the
+    outermost level."""
+    import repro.topo.strategy  # noqa: F401  (registers "hier_daso")
+
     if cfg.strategy not in list_strategies():
         raise KeyError(f"unknown strategy {cfg.strategy!r}; "
                        f"registered: {list_strategies()}")
     if cfg.strategy == "sync":
+        if cfg.topology is not None:
+            resolve_topology(cfg)  # raises with the explanation
         return make_strategy("sync", loss_fn, optimizer)
+    spec = resolve_topology(cfg)
+    n_replicas = spec.n_replicas if spec is not None else cfg.n_replicas
+    world = spec.world if spec is not None \
+        else cfg.n_replicas * cfg.local_world
+    b_max = (spec.outer.period if spec is not None
+             and spec.outer.period is not None else cfg.b_max)
     dcfg = DasoConfig(
-        n_replicas=cfg.n_replicas,
-        global_world=cfg.n_replicas * cfg.local_world,
-        b_max=cfg.b_max,
+        n_replicas=n_replicas,
+        global_world=world,
+        b_max=b_max,
         warmup_steps=int(cfg.warmup_frac * cfg.n_steps),
         cooldown_steps=int(cfg.cooldown_frac * cfg.n_steps),
         total_steps=cfg.n_steps,
         wire_format=cfg.wire_format,
         exchange_impl=cfg.exchange_impl)
+    if spec is not None:
+        from repro.topo import build_topology_strategy
+        return build_topology_strategy(loss_fn, optimizer, spec, dcfg,
+                                       loss_window=cfg.loss_window)
+    if cfg.strategy == "hier_daso":
+        raise ValueError("strategy 'hier_daso' needs a topology spec "
+                         "(TrainLoopConfig.topology / --topology)")
     controller = DasoController(dcfg, loss_window=cfg.loss_window)
     return make_strategy(cfg.strategy, loss_fn, optimizer, dcfg,
                          controller=controller)

@@ -1,0 +1,108 @@
+#!/usr/bin/env python
+"""Markdown link checker for the docs layer (CI docs job).
+
+Scans the given markdown files for inline links/images and verifies every
+*relative* target resolves: the file exists, and when the link carries a
+``#fragment`` the target file contains a heading whose GitHub-style slug
+matches. External schemes (http/https/mailto) are not fetched — this
+checker guards the repo-internal cross-links (README <-> docs <->
+EXPERIMENTS) that otherwise rot silently when files move or headings are
+reworded.
+
+  python tools/check_links.py README.md EXPERIMENTS.md docs/*.md
+
+Exit status 0 = all links resolve; 1 = at least one broken link (each
+printed as ``file:line: broken link``).
+"""
+from __future__ import annotations
+
+import re
+import sys
+
+# inline markdown links/images: [text](target) — code spans are stripped
+# first so `[x](y)` examples inside backticks don't count
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+_CODE_SPAN_RE = re.compile(r"`[^`]*`")
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style heading slug: strip markdown emphasis/code markers,
+    lowercase, drop punctuation, spaces -> dashes."""
+    text = re.sub(r"[`*_]", "", heading.strip())
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # linked headings
+    text = text.lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return re.sub(r" ", "-", text)
+
+
+def heading_slugs(path) -> set:
+    slugs = set()
+    counts = {}
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            m = _HEADING_RE.match(line)
+            if not m:
+                continue
+            slug = slugify(m.group(1))
+            n = counts.get(slug, 0)
+            counts[slug] = n + 1
+            slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def check_file(path) -> list:
+    import os
+    errors = []
+    base = os.path.dirname(os.path.abspath(path))
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for m in _LINK_RE.finditer(_CODE_SPAN_RE.sub("", line)):
+                target = m.group(1)
+                if target.startswith(_EXTERNAL):
+                    continue
+                ref, _, frag = target.partition("#")
+                dest = os.path.normpath(os.path.join(base, ref)) if ref \
+                    else os.path.abspath(path)
+                if not os.path.exists(dest):
+                    errors.append(f"{path}:{lineno}: broken link "
+                                  f"{target!r} -> {dest} (missing file)")
+                    continue
+                if frag and dest.endswith(".md"):
+                    if frag not in heading_slugs(dest):
+                        errors.append(f"{path}:{lineno}: broken anchor "
+                                      f"{target!r} (no heading "
+                                      f"#{frag} in {dest})")
+    return errors
+
+
+def main(argv) -> int:
+    if not argv:
+        print("usage: check_links.py FILE.md [FILE.md ...]",
+              file=sys.stderr)
+        return 2
+    errors = []
+    for path in argv:
+        errors.extend(check_file(path))
+    for e in errors:
+        print(e)
+    print(f"checked {len(argv)} files: "
+          f"{'OK' if not errors else f'{len(errors)} broken'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
