@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.flatbuf import host_fetchable
+
 # bump when TrainState's layout changes incompatibly; loaders refuse
 # newer-than-known versions instead of misreading them
 TRAIN_STATE_VERSION = 1
@@ -75,6 +77,16 @@ def save_checkpoint(path: str, tree, *, step: int = 0,
     flat = _flatten(tree)
     arrays, manifest = {}, {"step": step, "dtypes": {}, "extra": extra or {}}
     for k, v in flat.items():
+        # process-aware contract: in a multi-process run, arrays sharded
+        # across processes must be gathered BEFORE the (process-0-only)
+        # write — train/loop.py does this via MeshPlacement.fetch. Fail
+        # with the fix spelled out rather than letting device_get throw a
+        # cross-process transfer error mid-save.
+        if not host_fetchable(v):
+            raise ValueError(
+                f"checkpoint leaf {k!r} is sharded across processes; "
+                "gather it to host first (launch.distributed."
+                "MeshPlacement.fetch) — only process 0 writes checkpoints")
         arr = np.asarray(jax.device_get(v))
         manifest["dtypes"][k] = str(jnp.asarray(v).dtype)
         if arr.dtype == jnp.bfloat16:

@@ -96,6 +96,13 @@ class DasoConfig:
     # global sync regardless of leaf count); "per_leaf" = the legacy
     # one-collective-per-leaf reference path (equivalence oracle).
     exchange_impl: str = "fused"
+    # Transport-invariant exchanges: every cross-replica mean runs as an
+    # explicitly associated chain of adds (flatbuf.chain_axis0_sum) instead
+    # of one lax.reduce, so results are bit-identical for ANY process
+    # layout of the replica axis. The multi-process runtime switches this
+    # on (its 1-process oracle too); default False keeps the
+    # one-collective-per-arena HLO contract and single-program perf.
+    deterministic_reduce: bool = False
     # Route the arena's elementwise exchange math (Eq.(1) merge, wire
     # casts, int8 codec) through the Pallas kernels in
     # repro.kernels.comm_kernels instead of plain jnp. Default False: the
@@ -153,7 +160,7 @@ def _wire_format_from(wire_dtype, wire_format) -> str:
 
 
 def _arena_mean(arena, wire_format: str, *, int8_block: int,
-                use_kernels: bool, mask=None):
+                use_kernels: bool, mask=None, deterministic: bool = False):
     """Mean over the leading replica axis of one arena, kept as a (1, N)
     buffer (the caller broadcasts per leaf after unpacking — one full-size
     materialization instead of two). Exactly one axis-0 reduction per
@@ -170,8 +177,8 @@ def _arena_mean(arena, wire_format: str, *, int8_block: int,
         # computed in f32 and rounded back (an int-dtype reduce would
         # truncate the 1/R scale to zero)
         w = arena.astype(jnp.float32)
-        return jnp.round(
-            flatbuf.masked_axis0_mean(w, mask)).astype(arena.dtype)
+        return jnp.round(flatbuf.masked_axis0_mean(
+            w, mask, deterministic)).astype(arena.dtype)
     if wire_format == "int8":
         # each replica quantizes its arena (int8 + per-block scales is what
         # a real DCN transfer would carry); the mean runs over the
@@ -180,31 +187,35 @@ def _arena_mean(arena, wire_format: str, *, int8_block: int,
         # unbiased stochastic tier stays a codec/kernel-API option.
         deq = flatbuf.wire_roundtrip(arena, "int8", int8_block=int8_block,
                                      use_kernels=use_kernels)
-        return flatbuf.masked_axis0_mean(deq, mask).astype(arena.dtype)
+        return flatbuf.masked_axis0_mean(
+            deq, mask, deterministic).astype(arena.dtype)
     # Pin the reduction computation dtype by reducing the wire-cast arena
     # directly (flatbuf.masked_axis0_mean uses lax.reduce): both jnp.mean
     # and jnp.sum(dtype=...) silently upcast bf16 accumulation to f32,
     # which puts f32 on the cross-pod wire (verified in HLO).
     w = (flatbuf.encode_wire(arena, "bf16", use_kernels=use_kernels)
          if wire_format == "bf16" else arena)
-    return flatbuf.masked_axis0_mean(w, mask).astype(arena.dtype)
+    return flatbuf.masked_axis0_mean(w, mask,
+                                     deterministic).astype(arena.dtype)
 
 
-def replica_mean_per_leaf(tree, wire_dtype=None, mask=None):
+def replica_mean_per_leaf(tree, wire_dtype=None, mask=None,
+                          deterministic: bool = False):
     """Legacy per-leaf exchange: one cross-pod all-reduce PER LEAF. Kept as
     the equivalence oracle and microbenchmark baseline for the fused arena
     path (`replica_mean`); f32/bf16 wire only. `mask` applies the same
     membership weighting as the fused path."""
     def leaf(x):
         wd = jnp.dtype(wire_dtype or x.dtype)
-        m = flatbuf.masked_axis0_mean(x.astype(wd), mask)
+        m = flatbuf.masked_axis0_mean(x.astype(wd), mask, deterministic)
         return jnp.broadcast_to(m, x.shape).astype(x.dtype)
     return jax.tree.map(leaf, tree)
 
 
 def replica_mean(tree, wire_dtype=None, *, wire_format=None,
                  impl: str = "fused", int8_block: int = 256,
-                 use_kernels: bool = False, mask=None):
+                 use_kernels: bool = False, mask=None,
+                 deterministic: bool = False):
     """Mean over the leading replica axis, broadcast back.
 
     Default path packs the pytree into one contiguous arena per dtype
@@ -221,11 +232,13 @@ def replica_mean(tree, wire_dtype=None, *, wire_format=None,
             raise ValueError("int8 wire format requires the fused arena "
                              "exchange (impl='fused')")
         return replica_mean_per_leaf(
-            tree, jnp.bfloat16 if wf == "bf16" else None, mask=mask)
+            tree, jnp.bfloat16 if wf == "bf16" else None, mask=mask,
+            deterministic=deterministic)
     layout = flatbuf.build_layout(tree, batch_dims=1)
     arenas = flatbuf.pack(tree, layout)
     out = {k: _arena_mean(a, wf, int8_block=int8_block,
-                          use_kernels=use_kernels, mask=mask)
+                          use_kernels=use_kernels, mask=mask,
+                          deterministic=deterministic)
            for k, a in arenas.items()}
     # unpack the (1, N) means, then broadcast per leaf: the broadcast fuses
     # into each leaf's consumer instead of materializing a second full-size
@@ -236,7 +249,8 @@ def replica_mean(tree, wire_dtype=None, *, wire_format=None,
         lambda m: jnp.broadcast_to(m, (r,) + m.shape[1:]), mean_tree)
 
 
-def _arena_group_mean(arena, group_size: int, mask=None):
+def _arena_group_mean(arena, group_size: int, mask=None,
+                      deterministic: bool = False):
     """Mean over contiguous replica groups of size `group_size` on one
     arena: reshape (R, N) -> (R/g, g, N), ONE `lax.reduce` over the group
     axis, broadcast back. On a topology-lowered mesh the group axis is
@@ -249,8 +263,9 @@ def _arena_group_mean(arena, group_size: int, mask=None):
     ghosts that `freeze_inactive` pins anyway)."""
     r = arena.shape[0]
     if group_size == r:
-        return jnp.broadcast_to(flatbuf.masked_axis0_mean(arena, mask),
-                                arena.shape)
+        return jnp.broadcast_to(
+            flatbuf.masked_axis0_mean(arena, mask, deterministic),
+            arena.shape)
     if r % group_size:
         raise ValueError(f"replica axis {r} not divisible by group size "
                          f"{group_size}")
@@ -258,7 +273,14 @@ def _arena_group_mean(arena, group_size: int, mask=None):
     w = arena if mask is None else arena * flatbuf.membership_col(
         mask, arena.dtype, arena.ndim)
     wr = jnp.reshape(w, (n_groups, g) + arena.shape[1:])
-    s = jax.lax.reduce(wr, jnp.zeros((), arena.dtype), jax.lax.add, (1,))
+    if deterministic:
+        # same chain formulation as flatbuf.chain_axis0_sum, over the
+        # group axis: order-fixed adds, transport-invariant result
+        s = wr[:, 0]
+        for i in range(1, g):
+            s = s + wr[:, i]
+    else:
+        s = jax.lax.reduce(wr, jnp.zeros((), arena.dtype), jax.lax.add, (1,))
     if mask is None:
         inv = jnp.asarray(1.0 / g, arena.dtype)
     else:
@@ -273,7 +295,8 @@ def _arena_group_mean(arena, group_size: int, mask=None):
 
 
 def level_group_mean(tree, group_size: int, *, wire_format: str = "f32",
-                     use_kernels: bool = False, mask=None):
+                     use_kernels: bool = False, mask=None,
+                     deterministic: bool = False):
     """Synchronous parameter average over contiguous replica groups of
     `group_size` — the sync primitive of one intermediate topology level
     (repro/topo: group_size = prod of replica-level fanouts up to the
@@ -295,12 +318,13 @@ def level_group_mean(tree, group_size: int, *, wire_format: str = "f32",
     for k, a in arenas.items():
         if not jnp.issubdtype(a.dtype, jnp.floating):
             w = a.astype(jnp.float32)
-            out[k] = jnp.round(
-                _arena_group_mean(w, group_size, mask)).astype(a.dtype)
+            out[k] = jnp.round(_arena_group_mean(
+                w, group_size, mask, deterministic)).astype(a.dtype)
             continue
         w = (flatbuf.encode_wire(a, "bf16", use_kernels=use_kernels)
              if wire_format == "bf16" else a)
-        out[k] = _arena_group_mean(w, group_size, mask).astype(a.dtype)
+        out[k] = _arena_group_mean(w, group_size, mask,
+                                   deterministic).astype(a.dtype)
     return flatbuf.unpack(out, layout)
 
 
@@ -336,7 +360,8 @@ def freeze_inactive(new_tree, old_tree, mask):
 
 def global_send(params, *, compress: bool = False, wire_format=None,
                 impl: str = "fused", int8_block: int = 256,
-                use_kernels: bool = False, mask=None):
+                use_kernels: bool = False, mask=None,
+                deterministic: bool = False):
     """Snapshot + start global exchange: returns the in-flight buffer
     (replica mean of current params, one copy per replica). The wire tier
     comes from `wire_format` (or legacy compress=True -> bf16,
@@ -345,7 +370,7 @@ def global_send(params, *, compress: bool = False, wire_format=None,
     wf = wire_format or ("bf16" if compress else "f32")
     return replica_mean(params, wire_format=wf, impl=impl,
                         int8_block=int8_block, use_kernels=use_kernels,
-                        mask=mask)
+                        mask=mask, deterministic=deterministic)
 
 
 def global_receive_per_leaf(params, inflight, *, staleness: int,
@@ -405,14 +430,15 @@ def global_receive(params, inflight, *, staleness: int, global_world,
 
 def blocking_sync(params, *, compress: bool = True, wire_format=None,
                   impl: str = "fused", int8_block: int = 256,
-                  use_kernels: bool = False, mask=None):
+                  use_kernels: bool = False, mask=None,
+                  deterministic: bool = False):
     """Synchronous global average (warm-up / cool-down), with the paper's
     16-bit transfer compression (or the tier in `wire_format`). `mask`
     restricts the average to active replicas and freezes dropped rows."""
     wf = wire_format or ("bf16" if compress else "f32")
     synced = replica_mean(params, wire_format=wf, impl=impl,
                           int8_block=int8_block, use_kernels=use_kernels,
-                          mask=mask)
+                          mask=mask, deterministic=deterministic)
     return freeze_inactive(synced, params, mask)
 
 
@@ -514,6 +540,7 @@ def daso_train_step(loss_fn: Callable, optimizer: Optimizer, cfg: DasoConfig,
 
     impl, kern, blk = (cfg.exchange_impl, cfg.exchange_kernels,
                        cfg.int8_block)
+    det = cfg.deterministic_reduce
     mask = flatbuf.normalize_membership(membership, cfg.n_replicas)
     n_active = cfg.n_replicas if mask is None else int(sum(mask))
     p_eff = (cfg.global_world if mask is None
@@ -536,24 +563,33 @@ def daso_train_step(loss_fn: Callable, optimizer: Optimizer, cfg: DasoConfig,
         params, opt_state = new_p, new_o
         for _name, g in inner_syncs:
             params = freeze_inactive(
-                level_group_mean(params, g, use_kernels=kern, mask=mask),
+                level_group_mean(params, g, use_kernels=kern, mask=mask,
+                                 deterministic=det),
                 params, mask)
         if mode in ("send", "send_receive"):
             inflight = global_send(
                 params, wire_format=cfg.wire_format_for(blocking=False),
-                impl=impl, int8_block=blk, use_kernels=kern, mask=mask)
+                impl=impl, int8_block=blk, use_kernels=kern, mask=mask,
+                deterministic=det)
         elif mode == "blocking":
             params = blocking_sync(
                 params, wire_format=cfg.wire_format_for(blocking=True),
-                impl=impl, int8_block=blk, use_kernels=kern, mask=mask)
+                impl=impl, int8_block=blk, use_kernels=kern, mask=mask,
+                deterministic=det)
         elif mode == "hard_avg":
             params = freeze_inactive(
-                replica_mean(params, impl=impl, mask=mask), params, mask)
-        if mask is None:
+                replica_mean(params, impl=impl, mask=mask,
+                             deterministic=det), params, mask)
+        # the reported loss feeds the plateau controller on the host, so
+        # it needs the same transport invariance as the exchanges
+        w_l = (jnp.ones((cfg.n_replicas,), loss_r.dtype) if mask is None
+               else jnp.asarray(mask, loss_r.dtype))
+        if det:
+            loss = flatbuf.chain_axis0_sum(loss_r * w_l) / n_active
+        elif mask is None:
             loss = jnp.mean(loss_r)
         else:
-            w = jnp.asarray(mask, loss_r.dtype)
-            loss = jnp.sum(loss_r * w) / n_active
+            loss = jnp.sum(loss_r * w_l) / n_active
         metrics = {"loss": loss, "loss_per_replica": loss_r}
         for k, v in aux_r.items():
             if isinstance(v, jnp.ndarray) and v.ndim <= 1:

@@ -353,11 +353,15 @@ class MacroCycleExecutor:
     """
 
     def __init__(self, strategy: Strategy, *, max_cycle_len: int = 32,
-                 donate: bool = True, tail_fallback: bool = True):
+                 donate: bool = True, tail_fallback: bool = True,
+                 placement=None):
         self.strategy = strategy
         self.max_cycle_len = max_cycle_len
         self.donate = donate
         self.tail_fallback = tail_fallback
+        # optional launch.distributed.MeshPlacement: batches staged onto
+        # the global topology mesh instead of the local default device
+        self.placement = placement
         self.stats = ExecutorStats()
         self._programs: Dict[CycleShape, Callable] = {}
         self._per_step: Dict[Tuple[str, int], Callable] = {}
@@ -453,6 +457,20 @@ class MacroCycleExecutor:
         return carry, metrics
 
 
+def resolve_executor(strategy: Strategy,
+                     executor: Optional[MacroCycleExecutor],
+                     placement) -> Tuple[MacroCycleExecutor, object]:
+    """One rule for marrying a (possibly caller-built) executor with a
+    (possibly absent) placement: build the executor if needed, hand it the
+    placement unless it already carries one, and return the placement that
+    is actually in force. Shared by `run_compiled_training` and the
+    resilience supervisor so the two dispatch loops cannot drift."""
+    ex = executor or MacroCycleExecutor(strategy, placement=placement)
+    if placement is not None and ex.placement is None:
+        ex.placement = placement
+    return ex, ex.placement
+
+
 def dispatch_planned_cycle(ex: MacroCycleExecutor, carry, plan: CyclePlan,
                            data_fn: Callable, lr_fn: Callable,
                            n_steps: int):
@@ -462,12 +480,20 @@ def dispatch_planned_cycle(ex: MacroCycleExecutor, carry, plan: CyclePlan,
     supervisor so the two dispatch loops cannot silently drift."""
     steps = range(plan.start_step, plan.start_step + len(plan))
     per_step = [data_fn(t) for t in steps]
-    batches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_step)
-    lrs = jnp.asarray([lr_fn(t) for t in steps], jnp.float32)
+    lr_list = [lr_fn(t) for t in steps]
+    if ex.placement is not None:
+        batches, lrs = ex.placement.stage_cycle(per_step, lr_list)
+    else:
+        batches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_step)
+        lrs = jnp.asarray(lr_list, jnp.float32)
     carry, metrics = ex.run_cycle(
         carry, plan, batches, lrs,
         is_tail=plan.start_step + len(plan) >= n_steps)
-    host = {k: np.asarray(v) for k, v in metrics.items()}
+    # per-replica diagnostics may be sharded across processes in a
+    # distributed run; only host-fetchable metrics (scalars are always
+    # replicated) feed the loss trace
+    host = {k: np.asarray(v) for k, v in metrics.items()
+            if flatbuf.host_fetchable(v)}
     cycle_losses = [float(host["loss"][j]) for j in range(len(plan))]
     per_step_metrics = [{k: float(v[j]) for k, v in host.items()
                          if v.ndim == 1} for j in range(len(plan))]
@@ -480,7 +506,8 @@ def run_compiled_training(strategy: Strategy, params0, data_fn: Callable,
                           track_divergence: bool = False,
                           start_step: int = 0, carry=None,
                           ckpt_every: int = 0,
-                          ckpt_cb: Optional[Callable] = None):
+                          ckpt_cb: Optional[Callable] = None,
+                          placement=None):
     """Macro-cycle counterpart of `simulator.run_per_step_training`: plans
     cycles from the strategy's controller, stacks the per-step batches, and
     dispatches one compiled program per cycle. Numerically equivalent to the
@@ -499,11 +526,20 @@ def run_compiled_training(strategy: Strategy, params0, data_fn: Callable,
     where a fresh run also had a plan boundary, which is what makes a
     resumed schedule (and hence the numerics) identical to an
     uninterrupted run.
+
+    `placement` (launch.distributed.MeshPlacement) runs the identical loop
+    over the global topology mesh: carry and batches are sharded over the
+    replica-level axes, final params are gathered to host. The compiled
+    programs do not depend on the process count, which is what makes an
+    N-process run bit-exact with the 1-process one
+    (tests/test_multiprocess.py).
     """
     from repro.core.simulator import SimResult
 
-    ex = executor or MacroCycleExecutor(strategy)
+    ex, placement = resolve_executor(strategy, executor, placement)
     carry = strategy.init_carry(params0) if carry is None else carry
+    if placement is not None:
+        carry = placement.put_carry(carry)
     losses: List[float] = []
     metrics_log: List[Dict[str, float]] = []
     divs: List[float] = []
@@ -526,8 +562,10 @@ def run_compiled_training(strategy: Strategy, params0, data_fn: Callable,
         if next_ckpt is not None and ckpt_cb is not None and step >= next_ckpt:
             ckpt_cb(step, carry, losses)
             next_ckpt = (step // ckpt_every + 1) * ckpt_every
-    return SimResult(losses=losses, metrics=metrics_log,
-                     params=strategy.finalize_params(carry),
+    params = (placement.finalize_params(strategy, carry)
+              if placement is not None
+              else strategy.finalize_params(carry))
+    return SimResult(losses=losses, metrics=metrics_log, params=params,
                      sync_fraction=strategy.sync_fraction(),
                      controller=strategy.controller, divergence=divs,
                      executor_stats=ex.stats)

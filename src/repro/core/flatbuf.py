@@ -169,18 +169,56 @@ def membership_col(mask: Tuple[float, ...], dtype, ndim: int) -> jnp.ndarray:
 
 
 def masked_axis0_mean(arena: jnp.ndarray,
-                      mask: Optional[Tuple[float, ...]]) -> jnp.ndarray:
+                      mask: Optional[Tuple[float, ...]],
+                      deterministic: bool = False) -> jnp.ndarray:
     """Membership-weighted mean over the leading replica axis of an arena,
     kept as a (1, ...) buffer: sum of active rows / n_active, one axis-0
     `lax.reduce` (the op that lowers to the cross-pod all-reduce). With
     mask=None this is the plain mean. Computation dtype = arena dtype (the
-    caller has already applied the wire cast)."""
+    caller has already applied the wire cast).
+
+    `deterministic=True` selects the transport-invariant formulation
+    (`chain_axis0_sum`): same math, explicitly associated adds, so the
+    result is bit-identical for any process layout of the replica axis —
+    at the cost of O(R) collectives instead of one. The multi-process
+    runtime (launch/distributed.py) runs its exchanges in this tier; the
+    default tier keeps the one-collective HLO contract."""
     r = arena.shape[0]
     w = arena if mask is None else arena * membership_col(mask, arena.dtype,
                                                           arena.ndim)
     inv = 1.0 / (r if mask is None else sum(mask))
-    m = jax.lax.reduce(w, jnp.zeros((), arena.dtype), jax.lax.add, (0,))
+    if deterministic:
+        m = chain_axis0_sum(w)
+    else:
+        m = jax.lax.reduce(w, jnp.zeros((), arena.dtype), jax.lax.add, (0,))
     return (m * jnp.asarray(inv, arena.dtype))[None]
+
+
+def host_fetchable(x) -> bool:
+    """True when `np.asarray(x)` is legal on this process: everything
+    except an array sharded across processes without a full local copy.
+    The single predicate behind metric fetches (core/executor.py), the
+    checkpoint-save guard (checkpoint/io.py), and the placement gather
+    (launch/distributed.py) — keep them agreeing by keeping them here."""
+    return (getattr(x, "is_fully_addressable", True)
+            or getattr(x, "is_fully_replicated", False))
+
+
+def chain_axis0_sum(w: jnp.ndarray) -> jnp.ndarray:
+    """Order-fixed sum over the leading axis: an explicitly associated
+    chain ``w[0] + w[1] + ...``. Under GSPMD each row access is data
+    movement plus arithmetically trivial collectives (every float add in
+    the chain has its operand order pinned by the program), so the value
+    does not depend on how the leading axis is sharded across devices or
+    processes — unlike a single `lax.reduce`, whose lowered all-reduce
+    accumulates in transport-defined order (XLA in-process and gloo
+    disagree at the ULP level). The price is R-1 sequential adds; the
+    multi-process equivalence contract (tests/test_multiprocess.py) is
+    what buys it."""
+    acc = w[0]
+    for i in range(1, w.shape[0]):
+        acc = acc + w[i]
+    return acc
 
 
 # -- wire codecs over an arena -------------------------------------------------

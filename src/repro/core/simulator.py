@@ -47,7 +47,8 @@ def run_per_step_training(strategy, params0, data_fn: Callable,
                           track_divergence: bool = False,
                           start_step: int = 0, carry=None,
                           ckpt_every: int = 0,
-                          ckpt_cb: Optional[Callable] = None) -> SimResult:
+                          ckpt_cb: Optional[Callable] = None,
+                          placement=None) -> SimResult:
     """Reference path: one jitted dispatch per training step, with the
     strategy's per-step mode decision (`next_mode`) and loss feedback
     (`observe`) interleaved exactly as on the original host loop.
@@ -55,8 +56,14 @@ def run_per_step_training(strategy, params0, data_fn: Callable,
 
     Resume/checkpoint surface mirrors `executor.run_compiled_training`:
     `start_step` + restored `carry` continue a run; `ckpt_cb(completed,
-    carry, losses)` fires after every `ckpt_every`-th step."""
+    carry, losses)` fires after every `ckpt_every`-th step.
+
+    `placement` (launch.distributed.MeshPlacement) runs the same loop over
+    the global topology mesh — the multi-process reference path the
+    macro-cycle distributed path is held against."""
     carry = strategy.init_carry(params0) if carry is None else carry
+    if placement is not None:
+        carry = placement.put_carry(carry)
     step_cache: Dict = {}
 
     def get_step(mode: str, staleness: int):
@@ -69,7 +76,10 @@ def run_per_step_training(strategy, params0, data_fn: Callable,
     for step in range(start_step, n_steps):
         mode, stale = strategy.next_mode(step)
         fn = get_step(mode, stale)
-        carry, m = fn(carry, data_fn(step), lr_fn(step))
+        batch = data_fn(step)
+        if placement is not None:
+            batch = placement.place_batch(batch)
+        carry, m = fn(carry, batch, lr_fn(step))
         loss = float(m["loss"])
         losses.append(loss)
         metrics_log.append({k: float(v) for k, v in m.items()
@@ -81,8 +91,10 @@ def run_per_step_training(strategy, params0, data_fn: Callable,
                 divs.append(d)
         if ckpt_every and ckpt_cb is not None and (step + 1) % ckpt_every == 0:
             ckpt_cb(step + 1, carry, losses)
-    return SimResult(losses=losses, metrics=metrics_log,
-                     params=strategy.finalize_params(carry),
+    params = (placement.finalize_params(strategy, carry)
+              if placement is not None
+              else strategy.finalize_params(carry))
+    return SimResult(losses=losses, metrics=metrics_log, params=params,
                      sync_fraction=strategy.sync_fraction(),
                      controller=strategy.controller, divergence=divs)
 

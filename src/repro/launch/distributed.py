@@ -1,0 +1,265 @@
+"""Multi-process distributed runtime (`jax.distributed`).
+
+Everything below this module runs the paper's algorithm as one SPMD program;
+what this module adds is the *real* deployment shape: N coordinator-connected
+processes (one per host in production; `tools/launch_procs.py` spawns local
+CPU-pinned ones for development and CI), each hosting a contiguous block of
+the topology's devices, jointly executing that same program over the global
+mesh. Three pieces:
+
+  * `DistributedConfig` / `initialize` — `jax.distributed.initialize`
+    bootstrap from flags or the ``DASO_COORDINATOR`` / ``DASO_NUM_PROCS`` /
+    ``DASO_PROC_ID`` environment (what `tools/launch_procs.py` exports).
+    Must run before any JAX device use; `launch/train.py` calls it first.
+  * `MeshPlacement` — the placement layer the train loop, both executors,
+    and the resilience supervisor thread their arrays through: the
+    `TopologySpec` lowered to the global mesh (one axis per level, so
+    levels map onto (process, local-device) axes — each process owns
+    exactly the subtree `launch.mesh.process_node_paths` reports), carry
+    and batch shardings over the replica-level axes, and host gather for
+    metrics/checkpoints (only process 0 writes).
+  * the SPMD-equivalence contract — because every process runs the same
+    deterministic host loop (synthetic data, controller, fault plans are
+    all seeded) and the global mesh is identical for any process count, an
+    N-process run is bit-exact with the 1-process run of the same spec,
+    seed, and fault plan (tests/test_multiprocess.py asserts it on both
+    executors, with real subprocesses).
+
+The contract's load-bearing assumption — worth stating because it is the
+thing a new backend could break — is that the per-device programs GSPMD
+emits depend only on the mesh, never on process boundaries; the only
+cross-process difference is collective transport (XLA in-process vs gloo),
+which is reduction-order-identical on the CPU backend.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import numpy as np
+
+# the one host-fetchability predicate, shared with the executor's metric
+# filter and the checkpoint-save guard
+from repro.core.flatbuf import host_fetchable  # noqa: F401  (re-exported)
+from repro.launch.mesh import make_topology_mesh, validate_process_topology
+
+ENV_COORDINATOR = "DASO_COORDINATOR"
+ENV_NUM_PROCS = "DASO_NUM_PROCS"
+ENV_PROC_ID = "DASO_PROC_ID"
+
+_initialized = False
+
+
+@dataclass(frozen=True)
+class DistributedConfig:
+    """Who we are in the process group. `num_processes == 1` means the
+    single-process SPMD simulation — same code path, no coordinator."""
+    coordinator: Optional[str] = None     # "host:port"
+    num_processes: int = 1
+    process_id: int = 0
+
+    @classmethod
+    def from_env(cls, *, coordinator: Optional[str] = None,
+                 num_processes: Optional[int] = None,
+                 process_id: Optional[int] = None) -> "DistributedConfig":
+        """Resolve explicit flag values, falling back to the DASO_* env
+        vars `tools/launch_procs.py` exports for its children."""
+        coord = coordinator or os.environ.get(ENV_COORDINATOR)
+        n = num_processes if num_processes is not None else int(
+            os.environ.get(ENV_NUM_PROCS, "1"))
+        pid = process_id if process_id is not None else int(
+            os.environ.get(ENV_PROC_ID, "0"))
+        if n > 1 and not coord:
+            raise ValueError(
+                f"{n} processes need a coordinator address "
+                f"(--coordinator host:port or ${ENV_COORDINATOR})")
+        if not 0 <= pid < n:
+            raise ValueError(f"process_id {pid} outside 0..{n - 1}")
+        return cls(coordinator=coord, num_processes=n, process_id=pid)
+
+
+def initialize(cfg: DistributedConfig) -> None:
+    """Connect this process to the coordinator (idempotent; no-op for a
+    single process). Must be called before anything touches JAX devices —
+    the backend is configured here (CPU cross-process collectives run on
+    gloo)."""
+    global _initialized
+    if cfg.num_processes <= 1 or _initialized:
+        return
+    try:
+        # gloo is the CPU cross-process transport; newer jaxlibs select it
+        # automatically once distributed is initialized
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except AttributeError:
+        pass
+    try:
+        # async dispatch lets consecutive executables be in flight at
+        # once; their gloo collectives then interleave on the same TCP
+        # pairs and abort with size-mismatch errors (observed: "op.
+        # preamble.length <= op.nbytes" / "connection reset by peer"
+        # flakes under load). Serial dispatch pins one collective in
+        # flight per process — the same order on every process.
+        jax.config.update("jax_cpu_enable_async_dispatch", False)
+    except AttributeError:
+        pass
+    jax.distributed.initialize(coordinator_address=cfg.coordinator,
+                               num_processes=cfg.num_processes,
+                               process_id=cfg.process_id)
+    _initialized = True
+
+
+def is_coordinator() -> bool:
+    return jax.process_index() == 0
+
+
+def forced_cpu_env(devices: int, base: Optional[dict] = None) -> dict:
+    """Environment for a spawned CPU-JAX subprocess, with the JAX-relevant
+    variables pinned EXPLICITLY — never inherited — so a local run behaves
+    exactly like CI: platform is cpu (a developer's exported
+    JAX_PLATFORMS=cuda would silently turn the forced-device-count flag
+    into a no-op), and XLA_FLAGS forces `devices` host devices. The single
+    definition behind both tests/conftest.py's subprocess helpers and
+    tools/launch_procs.py's child environments."""
+    env = dict(os.environ if base is None else base)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    src = os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))  # .../src
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def _is_jax_array(x) -> bool:
+    return isinstance(x, jax.Array)
+
+
+class MeshPlacement:
+    """Array placement for one topology on the global device set.
+
+    Construction validates that the topology fits the process group (world
+    == device count, each process an integral subtree) and lowers the spec
+    to the global mesh. The same placement object drives single-process
+    SPMD runs (the equivalence oracle) and N-process runs — the shardings,
+    and therefore the compiled programs, are identical in both.
+    """
+
+    def __init__(self, spec, *, mesh=None):
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        self.spec = spec
+        n_procs = jax.process_count()
+        if n_procs > 1:
+            validate_process_topology(spec, n_procs)
+        if jax.device_count() != spec.world:
+            raise ValueError(
+                f"topology world {spec.world} ({spec.to_str()}) != global "
+                f"device count {jax.device_count()}; launch with "
+                f"world/num_processes devices per process "
+                f"(tools/launch_procs.py does this)")
+        self.mesh = mesh if mesh is not None else make_topology_mesh(spec)
+        names = spec.mesh_axis_names()           # outermost first
+        self.replica_axes = names[:-1]           # all replica levels
+        self.level0_axis = names[-1]             # intra-replica tier
+        self._P = PartitionSpec
+        self._NS = NamedSharding
+        self.replicated = NamedSharding(self.mesh, PartitionSpec())
+        # leading replica axis sharded over every replica-level mesh axis
+        # at once: level-l group means lower to collectives spanning
+        # exactly levels <= l (the per-level HLO contract)
+        self.carry_sharding = NamedSharding(
+            self.mesh, PartitionSpec(self.replica_axes))
+        self._gather = None
+
+    # -- identity ----------------------------------------------------------
+    @property
+    def is_coordinator(self) -> bool:
+        return is_coordinator()
+
+    # -- placement ---------------------------------------------------------
+    def _put(self, x, sharding):
+        """Build a global array from host data WITHOUT cross-process
+        traffic: every process holds the full value (the deterministic
+        host loops guarantee they agree), so each can materialize its own
+        addressable shards locally. `jax.device_put` would instead run an
+        assert-equal broadcast per leaf — a per-transfer collective on its
+        own communicator clique, which both costs a round-trip and races
+        other gloo traffic."""
+        if _is_jax_array(x) and not x.is_fully_addressable:
+            return x  # already global (resumed carry re-placed twice)
+        host = np.asarray(jax.device_get(x))
+        return jax.make_array_from_callback(host.shape, sharding,
+                                            lambda idx: host[idx])
+
+    def put_carry(self, carry):
+        """Place a strategy carry: every leaf with a leading replica axis
+        shards over the replica-level mesh axes; anything else (scalar
+        counters) replicates."""
+        R = self.spec.n_replicas
+
+        def one(x):
+            sh = (self.carry_sharding
+                  if getattr(x, "ndim", 0) >= 1 and x.shape[0] == R
+                  else self.replicated)
+            return self._put(x, sh)
+
+        return jax.tree.map(one, carry)
+
+    def _batch_sharding(self, ndim: int, shape, lead: int):
+        """Batch leaves are (R, per, ...) with `lead` extra leading axes
+        (the macro executor stacks a cycle axis in front). The per-replica
+        batch dim shards over the level-0 axis when it divides — the
+        intra-replica "data" tier of the topology."""
+        axes = [None] * lead + [self.replica_axes]
+        per_dim = lead + 1
+        if (ndim > per_dim and self.spec.local_world > 1
+                and shape[per_dim] % self.spec.local_world == 0):
+            axes.append(self.level0_axis)
+        return self._NS(self.mesh, self._P(*axes))
+
+    def place_batch(self, batch, *, lead: int = 0):
+        """Place one step's batch pytree (`lead=1` for a stacked cycle)."""
+        R = self.spec.n_replicas
+
+        def one(x):
+            x = np.asarray(jax.device_get(x))
+            if x.ndim <= lead or x.shape[lead] != R:
+                raise ValueError(
+                    f"batch leaf shape {x.shape} lacks the replica axis "
+                    f"R={R} at dim {lead} (distributed runs use "
+                    "replica-axis strategies)")
+            return self._put(x, self._batch_sharding(x.ndim, x.shape,
+                                                     lead))
+
+        return jax.tree.map(one, batch)
+
+    def stage_cycle(self, per_step_batches, lrs):
+        """Stack a macro-cycle's per-step batches on the host and place
+        them: batches (L, R, per, ...) sharded over the replica axes, lrs
+        (L,) replicated."""
+        stacked = jax.tree.map(
+            lambda *xs: np.stack([np.asarray(jax.device_get(x))
+                                  for x in xs]), *per_step_batches)
+        return (self.place_batch(stacked, lead=1),
+                self._put(np.asarray(lrs, np.float32), self.replicated))
+
+    # -- host gather -------------------------------------------------------
+    def fetch(self, tree):
+        """Gather a (possibly process-sharded) pytree to host numpy — the
+        same values on every process. Collective: every process must call
+        it at the same point (they do: the host loops are deterministic)."""
+        leaves = jax.tree.leaves(tree)
+        if all(host_fetchable(x) for x in leaves):
+            return jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                tree)
+        if self._gather is None:
+            self._gather = jax.jit(lambda t: t,
+                                   out_shardings=self.replicated)
+        rep = self._gather(tree)
+        return jax.tree.map(lambda x: np.asarray(jax.device_get(x)), rep)
+
+    def finalize_params(self, strategy, carry):
+        """Host-side final params: gather the carry, then the strategy's
+        own finalize (membership-aware row selection) on numpy."""
+        return strategy.finalize_params(self.fetch(carry))

@@ -33,10 +33,118 @@ def make_topology_mesh(spec, model: int = 1):
     The replica axis of the training arrays shards over ALL replica-level
     axes at once (``PartitionSpec((outer_name, ..., inner_name))``), which
     is what makes a level-l group mean lower to an all-reduce whose
-    replica groups span exactly the axes of levels <= l."""
+    replica groups span exactly the axes of levels <= l.
+
+    Under `jax.distributed` the same call on every process builds the same
+    *global* mesh: `jax.devices()` orders devices process-major, and the
+    mesh axes are outermost-level-first, so each process's contiguous
+    device block lands on a contiguous replica range — the subtree that
+    `process_node_paths` reports it as owning."""
     shape = spec.mesh_shape() + (model,)
     axes = spec.mesh_axis_names() + ("model",)
     return jax.make_mesh(shape, axes)
+
+
+# -- process <-> topology partitioning (multi-process runtime) ----------------
+#
+# Pure host-side functions — no jax device state — so the partition contract
+# is testable without spawning processes (tests/test_process_mesh.py).
+
+def replica_unit_sizes(spec):
+    """Replicas per unit of each replica level, innermost first:
+    ``{level_name: unit_size}``. A unit of the finest replica level is one
+    replica; a unit of level l contains the product of the replica-level
+    fanouts below it."""
+    sizes, u = {}, 1
+    for lvl in spec.replica_levels:
+        sizes[lvl.name] = u
+        u *= lvl.fanout
+    return sizes
+
+
+def validate_process_topology(spec, num_processes: int) -> int:
+    """Check that `num_processes` coordinator-connected processes can carve
+    the topology into equal per-process subtrees. Returns the number of
+    devices each process must host (``spec.world // num_processes``).
+
+    Raises ValueError with a precise reason when the split is impossible:
+    the world not dividing evenly, a replica straddling two processes, or
+    a process block cutting through a topology level's units."""
+    if num_processes < 1:
+        raise ValueError(f"num_processes must be >= 1, got {num_processes}")
+    if spec.world % num_processes:
+        raise ValueError(
+            f"topology world {spec.world} ({spec.to_str()}) does not divide "
+            f"over {num_processes} processes")
+    local = spec.world // num_processes
+    if local % spec.local_world:
+        raise ValueError(
+            f"{num_processes} processes would split a replica: each process "
+            f"gets {local} devices but one replica spans "
+            f"{spec.local_world} (level {spec.levels[0].name!r} fanout)")
+    block = spec.n_replicas // num_processes
+    for name, u in replica_unit_sizes(spec).items():
+        if block % u and u % block:
+            raise ValueError(
+                f"process blocks of {block} replicas cut through "
+                f"{name!r} units of {u} replicas: {num_processes} processes "
+                f"cannot own whole subtrees of {spec.to_str()!r}")
+    return local
+
+
+def process_replica_slice(spec, num_processes: int,
+                          process_id: int) -> range:
+    """Replica indices owned by `process_id` (contiguous: the mesh lowers
+    the replica axis process-major, inner levels varying fastest)."""
+    validate_process_topology(spec, num_processes)
+    if not 0 <= process_id < num_processes:
+        raise ValueError(f"process_id {process_id} outside "
+                         f"0..{num_processes - 1}")
+    block = spec.n_replicas // num_processes
+    return range(process_id * block, (process_id + 1) * block)
+
+
+def _node_path(spec, level_index: int, replica: int) -> str:
+    """Node path ("pod1/host0") of the level-`level_index` unit containing
+    `replica`, descending outermost-first as `TopologySpec.replicas_of`
+    expects."""
+    sizes = replica_unit_sizes(spec)
+    segs = []
+    for i in range(len(spec.levels) - 1, level_index - 1, -1):
+        lvl = spec.levels[i]
+        u = sizes[lvl.name]
+        idx = (replica // u) % lvl.fanout if i < len(spec.levels) - 1 \
+            else replica // u
+        segs.append(f"{lvl.name}{idx}")
+    return "/".join(segs)
+
+
+def process_node_paths(spec, num_processes: int, process_id: int):
+    """The maximal topology subtrees owned by `process_id`, as node paths
+    (`TopologySpec.replicas_of` round-trips them). With processes mapped
+    one-to-one onto units of some level this is a single path — the
+    process's subtree; coarser splits own several sibling subtrees."""
+    rng = process_replica_slice(spec, num_processes, process_id)
+    block = len(rng)
+    best_i, best_u = 1, 1
+    for i, lvl in enumerate(spec.levels[1:], start=1):
+        u = replica_unit_sizes(spec)[lvl.name]
+        if block % u == 0 and u >= best_u:
+            best_i, best_u = i, u
+    return tuple(_node_path(spec, best_i, r)
+                 for r in range(rng.start, rng.stop, best_u))
+
+
+def device_node_path(spec, device_index: int) -> str:
+    """Topology path of one global device: the finest replica-level node it
+    sits in, plus its rank inside that replica's level-0 tier —
+    ``"pod1/host0:chip2"``."""
+    if not 0 <= device_index < spec.world:
+        raise ValueError(f"device {device_index} outside the topology "
+                         f"world 0..{spec.world - 1}")
+    replica, local = divmod(device_index, spec.local_world)
+    return (f"{_node_path(spec, 1, replica)}:"
+            f"{spec.levels[0].name}{local}")
 
 
 # -- hardware constants (TPU v5e) used by the roofline analysis -------------

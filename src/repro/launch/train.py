@@ -19,6 +19,17 @@ Resilience surface:
     crash / rejoin / straggler / DCN degradation) through the resilience
     supervisor (resilience/supervisor.py).
 
+Distributed surface (launch/distributed.py): ``--distributed`` runs the
+same training over `jax.distributed` — one process per host, the topology
+mesh spanning all of them, process 0 owning logs/checkpoints/metrics.
+``--coordinator``/``--procs``/``--proc-id`` come from flags or from the
+``DASO_*`` environment that ``tools/launch_procs.py`` exports when it
+spawns N local coordinator-connected processes:
+
+  python tools/launch_procs.py --procs 2 -- \
+      --arch llama3.2-1b --topology "chip:1 x host:2 x pod:2" \
+      --distributed --steps 40
+
   python -m repro.launch.train --arch llama3.2-1b --strategy daso \
       --steps 300 --nodes 4 --b-max 4 [--executor macro|per_step] [--full]
 """
@@ -80,6 +91,13 @@ def main():
     ap.add_argument("--full", action="store_true",
                     help="use the full (published) config instead of reduced"
                          " — only sensible on real hardware")
+    ap.add_argument("--tiny", action="store_true",
+                    help="shrink the reduced LM config to quickstart scale "
+                         "(2 layers, d_model 128, vocab 256) — the CI / "
+                         "multiprocess-smoke arch. At this scale per-device "
+                         "compute sits below XLA CPU's intra-op partitioning "
+                         "thresholds, which the N-process bit-exactness "
+                         "contract relies on (docs/architecture.md)")
     ap.add_argument("--ckpt", default=None,
                     help="checkpoint directory: final params always land "
                          "here; with --ckpt-every, periodic TrainStates in "
@@ -96,9 +114,51 @@ def main():
                          "resilience supervisor; daso-family strategies "
                          "only")
     ap.add_argument("--metrics-out", default=None)
+    ap.add_argument("--distributed", action="store_true",
+                    help="run over jax.distributed: the topology mesh "
+                         "spans every coordinator-connected process "
+                         "(launch/distributed.py); requires --topology. "
+                         "With 1 process this is the SPMD oracle the "
+                         "N-process run is bit-exact with")
+    ap.add_argument("--coordinator", default=None, metavar="HOST:PORT",
+                    help="jax.distributed coordinator address (default "
+                         "$DASO_COORDINATOR — tools/launch_procs.py "
+                         "exports it)")
+    ap.add_argument("--procs", type=int, default=None,
+                    help="total process count (default $DASO_NUM_PROCS)")
+    ap.add_argument("--proc-id", type=int, default=None,
+                    help="this process's id (default $DASO_PROC_ID)")
     args = ap.parse_args()
 
+    say = print
+    if args.distributed:
+        from repro.launch.distributed import (DistributedConfig, initialize,
+                                              is_coordinator)
+        if not args.topology:
+            ap.error("--distributed derives its mesh from --topology")
+        dist = DistributedConfig.from_env(coordinator=args.coordinator,
+                                          num_processes=args.procs,
+                                          process_id=args.proc_id)
+        initialize(dist)  # before anything touches devices
+        if not is_coordinator():
+            # one process speaks for the group; files are proc-0-only too
+            say = lambda *a, **k: None
+            args.metrics_out = None
+        say(f"[train] distributed: process {dist.process_id}/"
+            f"{dist.num_processes} "
+            f"({jax.local_device_count()} local of "
+            f"{jax.device_count()} global devices)")
+
     cfg = get_config(args.arch) if args.full else get_reduced(args.arch)
+    if args.tiny:
+        if args.full:
+            ap.error("--tiny and --full are mutually exclusive")
+        for f in ("n_layers", "d_model", "n_heads", "d_ff", "vocab_size"):
+            if not hasattr(cfg, f):
+                ap.error(f"--tiny shrinks LM configs; {args.arch!r} has no "
+                         f"{f!r}")
+        cfg = cfg.replace(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                          head_dim=32, d_ff=256, vocab_size=256)
     key = jax.random.PRNGKey(args.seed)
     params0 = init_params(cfg, key)
     loss_fn = make_lm_loss(cfg)
@@ -116,9 +176,9 @@ def main():
         # build_strategy's lowering does), so log the schedule that runs
         b_eff = (spec.outer.period if spec.outer.period is not None
                  else args.b_max)
-        print(f"[train] topology: {spec.to_str()} -> R={spec.n_replicas} "
-              f"world={spec.world} inner_periods="
-              f"{derive_inner_periods(spec, b_max=b_eff)}")
+        say(f"[train] topology: {spec.to_str()} -> R={spec.n_replicas} "
+            f"world={spec.world} inner_periods="
+            f"{derive_inner_periods(spec, b_max=b_eff)}")
     R, per = args.nodes, args.per_node_batch
 
     def daso_data(step):
@@ -140,7 +200,7 @@ def main():
         executor=args.executor, max_cycle_len=args.max_cycle_len,
         wire_format=args.wire_format, exchange_impl=args.exchange_impl,
         ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt,
-        resume_from=args.resume)
+        resume_from=args.resume, distributed=args.distributed)
     lr_fn = warmup_linear_scaled(args.lr / (R * args.local_world),
                                  R * args.local_world,
                                  max(1, args.steps // 10))
@@ -169,10 +229,18 @@ def main():
         plan.validate(R)
         strategy = build_strategy(loss_fn, loop_cfg,
                                   sgd(momentum=0.9, weight_decay=1e-4))
+        placement = None
+        if args.distributed:
+            from repro.launch.distributed import MeshPlacement
+            placement = MeshPlacement(spec)
 
         ckpt_cb = None
         if args.ckpt_every:
             def ckpt_cb(step, carry, seg_losses):
+                if placement is not None:
+                    carry = placement.fetch(carry)  # collective: all procs
+                    if not placement.is_coordinator:
+                        return
                 save_train_state(
                     ckpt_step_dir(args.ckpt, step),
                     TrainState(
@@ -186,29 +254,29 @@ def main():
         report = run_with_faults(strategy, params0, daso_data, lr_fn,
                                  args.steps, plan,
                                  ckpt_every=args.ckpt_every,
-                                 ckpt_cb=ckpt_cb)
+                                 ckpt_cb=ckpt_cb, placement=placement)
         result = report.result
-        print(f"[train] fault plan: {len(plan.events)} events, "
-              f"{report.invalidations} cycle-cache invalidations, "
-              f"simulated_time={report.simulated_time_s:.2f}s")
+        say(f"[train] fault plan: {len(plan.events)} events, "
+            f"{report.invalidations} cycle-cache invalidations, "
+            f"simulated_time={report.simulated_time_s:.2f}s")
         for ev in report.applied:
-            print(f"[train]   step {ev['step']:>5} {ev['kind']:<12} "
-                  f"replica={ev.get('replica')} "
-                  f"handle={ev['handle_s'] * 1e3:.1f}ms "
-                  f"first_cycle={ev['first_cycle_s'] * 1e3:.1f}ms")
+            say(f"[train]   step {ev['step']:>5} {ev['kind']:<12} "
+                f"replica={ev.get('replica')} "
+                f"handle={ev['handle_s'] * 1e3:.1f}ms "
+                f"first_cycle={ev['first_cycle_s'] * 1e3:.1f}ms")
     else:
         result = run_training(loss_fn, params0, data_fn, loop_cfg,
-                              lr_fn=lr_fn)
+                              lr_fn=lr_fn, log=say)
     if result.executor_stats is not None:
         s = result.executor_stats
-        print(f"[train] executor: {s.dispatches} host dispatches for "
-              f"{args.steps} steps ({s.compiles} compiled cycle shapes, "
-              f"{s.fallback_steps} tail-fallback steps, "
-              f"{s.invalidations} invalidations)")
+        say(f"[train] executor: {s.dispatches} host dispatches for "
+            f"{args.steps} steps ({s.compiles} compiled cycle shapes, "
+            f"{s.fallback_steps} tail-fallback steps, "
+            f"{s.invalidations} invalidations)")
 
-    if args.ckpt:
+    if args.ckpt and (not args.distributed or jax.process_index() == 0):
         save_checkpoint(args.ckpt, result.params, step=args.steps)
-        print(f"[train] checkpoint -> {args.ckpt}")
+        say(f"[train] checkpoint -> {args.ckpt}")
     if args.metrics_out:
         os.makedirs(os.path.dirname(args.metrics_out) or ".", exist_ok=True)
         metrics = {"losses": result.losses,

@@ -30,7 +30,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 from repro.core.executor import (MacroCycleExecutor, Strategy,
-                                 dispatch_planned_cycle)
+                                 dispatch_planned_cycle, resolve_executor)
 from repro.core.schedule import Mode, split_mode
 from repro.core.simulator import SimResult
 from repro.resilience.faults import FaultPlan
@@ -65,7 +65,8 @@ def run_with_faults(strategy: Strategy, params0, data_fn: Callable,
                     exchange_cost_fn: Optional[Callable] = None,
                     topo=None,
                     ckpt_every: int = 0,
-                    ckpt_cb: Optional[Callable] = None) -> ResilienceReport:
+                    ckpt_cb: Optional[Callable] = None,
+                    placement=None) -> ResilienceReport:
     """Run `n_steps` of compiled training while replaying `plan`.
 
     `strategy` must be a replica-axis strategy (daso / hier_daso /
@@ -76,7 +77,14 @@ def run_with_faults(strategy: Strategy, params0, data_fn: Callable,
     events name topology nodes ("pod1", "pod1/host0") into the per-replica
     events of those subtrees; without it such plans are rejected by
     `validate`. `ckpt_every`/`ckpt_cb` follow the
-    executor.run_compiled_training contract."""
+    executor.run_compiled_training contract.
+
+    `placement` (launch.distributed.MeshPlacement) replays the same plan
+    over the multi-process mesh: every process applies the identical
+    membership flips and cache invalidations (the plan is deterministic),
+    a lost process's replicas are exactly a membership-mask event on its
+    subtree, and rejoin re-seeding runs on the gathered host carry so the
+    re-placed rows are identical on every process."""
     cfg = strategy.cfg
     if cfg is None:
         raise ValueError("run_with_faults needs a replica-axis strategy "
@@ -88,8 +96,10 @@ def run_with_faults(strategy: Strategy, params0, data_fn: Callable,
         plan = plan.resolve(topo)
     plan.validate(n_replicas)
 
-    ex = executor or MacroCycleExecutor(strategy)
+    ex, placement = resolve_executor(strategy, executor, placement)
     carry = strategy.init_carry(params0)
+    if placement is not None:
+        carry = placement.put_carry(carry)
     mask = list(plan.membership_at(-1, n_replicas))  # all active
     slowdowns = [1.0] * n_replicas
     dcn_scale = 1.0
@@ -117,8 +127,15 @@ def run_with_faults(strategy: Strategy, params0, data_fn: Callable,
             report.membership_timeline.append((step, tuple(mask)))
             pending_first_cycle.append(rec)
         elif ev.kind == "rejoin":
-            # re-seed BEFORE flipping the mask: donors are the survivors
-            carry = reseed_carry(carry, tuple(mask), [ev.replica])
+            # re-seed BEFORE flipping the mask: donors are the survivors.
+            # Distributed: surgery on the gathered host carry, re-placed —
+            # identical bytes on every process by construction.
+            if placement is not None:
+                carry = placement.put_carry(
+                    reseed_carry(placement.fetch(carry), tuple(mask),
+                                 [ev.replica]))
+            else:
+                carry = reseed_carry(carry, tuple(mask), [ev.replica])
             mask[ev.replica] = 1.0
             strategy.set_membership(mask)
             ex.invalidate()
@@ -177,8 +194,10 @@ def run_with_faults(strategy: Strategy, params0, data_fn: Callable,
             ckpt_cb(step, carry, losses)
             next_ckpt = (step // ckpt_every + 1) * ckpt_every
 
+    final = (placement.finalize_params(strategy, carry)
+             if placement is not None else strategy.finalize_params(carry))
     report.result = SimResult(losses=losses, metrics=metrics_log,
-                              params=strategy.finalize_params(carry),
+                              params=final,
                               sync_fraction=strategy.sync_fraction(),
                               controller=strategy.controller,
                               executor_stats=ex.stats)

@@ -66,6 +66,13 @@ class TrainLoopConfig:
     ckpt_every: int = 0
     ckpt_dir: Optional[str] = None
     resume_from: Optional[str] = None
+    # multi-process runtime (launch/distributed.py): run over the global
+    # topology mesh — jax.distributed must already be initialized (the
+    # launcher entry point does it) and `topology` must be set; replica
+    # levels shard over the (process, local-device) axes, process 0 owns
+    # logging and checkpoint writes. The same flag with one process is the
+    # single-process SPMD oracle the N-process run is bit-exact with.
+    distributed: bool = False
 
 
 def resolve_topology(cfg: TrainLoopConfig):
@@ -112,7 +119,11 @@ def build_strategy(loss_fn: Callable, cfg: TrainLoopConfig,
         cooldown_steps=int(cfg.cooldown_frac * cfg.n_steps),
         total_steps=cfg.n_steps,
         wire_format=cfg.wire_format,
-        exchange_impl=cfg.exchange_impl)
+        exchange_impl=cfg.exchange_impl,
+        # distributed runs pin every cross-replica reduction to the
+        # order-fixed chain formulation so the result is independent of
+        # the process layout (the N-proc == 1-proc bit-exactness contract)
+        deterministic_reduce=cfg.distributed)
     if spec is not None:
         from repro.topo import build_topology_strategy
         return build_topology_strategy(loss_fn, optimizer, spec, dcfg,
@@ -146,6 +157,18 @@ def run_training(loss_fn: Callable, params0, data_fn: Callable,
                          "expected 'macro' or 'per_step'")
     strategy = build_strategy(loss_fn, cfg, optimizer)
 
+    placement = None
+    if cfg.distributed:
+        from repro.launch.distributed import MeshPlacement
+        spec = resolve_topology(cfg)
+        if spec is None:
+            raise ValueError("distributed runs derive their mesh from the "
+                             "topology; set TrainLoopConfig.topology "
+                             "(--topology)")
+        placement = MeshPlacement(spec)
+        if log is not None and not placement.is_coordinator:
+            log = None  # one process speaks for the group
+
     start_step, carry, prior_losses = 0, None, []
     if cfg.resume_from:
         ts = load_train_state(cfg.resume_from)
@@ -166,6 +189,13 @@ def run_training(loss_fn: Callable, params0, data_fn: Callable,
     ckpt_cb = None
     if cfg.ckpt_every and cfg.ckpt_dir:
         def ckpt_cb(step, cur_carry, seg_losses):
+            # process-aware: the carry is gathered on EVERY process (the
+            # gather is a collective), then only process 0 touches the
+            # filesystem
+            if placement is not None:
+                cur_carry = placement.fetch(cur_carry)
+                if not placement.is_coordinator:
+                    return
             state = TrainState(
                 step=step, carry=cur_carry,
                 controller=(strategy.controller.state_dict()
@@ -182,10 +212,12 @@ def run_training(loss_fn: Callable, params0, data_fn: Callable,
         result = run_per_step_training(
             strategy, params0, data_fn, lr_fn, cfg.n_steps,
             start_step=start_step, carry=carry,
-            ckpt_every=cfg.ckpt_every, ckpt_cb=ckpt_cb)
+            ckpt_every=cfg.ckpt_every, ckpt_cb=ckpt_cb,
+            placement=placement)
     else:
         executor = MacroCycleExecutor(strategy,
-                                      max_cycle_len=cfg.max_cycle_len)
+                                      max_cycle_len=cfg.max_cycle_len,
+                                      placement=placement)
         result = run_compiled_training(
             strategy, params0, data_fn, lr_fn, cfg.n_steps,
             executor=executor, start_step=start_step, carry=carry,

@@ -54,5 +54,36 @@ def make_mlp_problem(key, R=2, per=16, d=8):
 
 # NOTE: XLA_FLAGS / device-count overrides are intentionally NOT set here —
 # smoke tests must see the real single CPU device. Multi-device distributed
-# tests spawn subprocesses that set --xla_force_host_platform_device_count
-# themselves (see test_distributed.py).
+# tests spawn subprocesses through the helpers below, which build the JAX
+# environment EXPLICITLY (platform + device count are always set, never
+# silently inherited) so a local `pytest` run behaves exactly like CI.
+
+
+
+def subprocess_env(devices: int = 1, extra: dict = None) -> dict:
+    """Environment for a spawned JAX subprocess: JAX_PLATFORMS is pinned
+    to cpu and XLA_FLAGS to the forced host device count — never
+    inherited from the developer's shell — so a local `pytest` run
+    behaves exactly like CI. One definition, shared with the process
+    launcher (launch.distributed.forced_cpu_env)."""
+    from repro.launch.distributed import forced_cpu_env
+
+    env = forced_cpu_env(devices)
+    if extra:
+        env.update(extra)
+    return env
+
+
+def run_subprocess(script: str, devices: int = 8, timeout: int = 900,
+                   extra_env: dict = None) -> str:
+    """Run an inline python script in a fresh process on `devices` forced
+    CPU devices; assert success and return stdout."""
+    import subprocess
+    import sys
+    import textwrap
+
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=subprocess_env(devices, extra_env))
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout

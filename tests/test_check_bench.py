@@ -1,0 +1,67 @@
+"""The perf-regression gate (tools/check_bench.py) must pass the committed
+records against themselves and fail on injected regressions. No JAX — pure
+JSON plumbing, so this runs in milliseconds."""
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TOOL = os.path.join(REPO, "tools", "check_bench.py")
+
+spec = importlib.util.spec_from_file_location("check_bench", TOOL)
+check_bench = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(check_bench)
+
+
+def _committed(name):
+    with open(os.path.join(REPO, name)) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("name", sorted(check_bench.POLICIES))
+def test_committed_records_pass_their_own_gate(name):
+    rec = _committed(name)
+    assert check_bench.check_record(name, rec, rec) == []
+
+
+def test_gate_catches_structural_break():
+    rec = _committed("BENCH_exchange.json")
+    bad = json.loads(json.dumps(rec))
+    bad["derived"]["all_reduce_ops_fused"] = 112  # fusion fell apart
+    fails = check_bench.check_record("BENCH_exchange.json", bad, rec)
+    assert any("all_reduce_ops_fused" in f for f in fails)
+
+
+def test_gate_catches_perf_regression():
+    rec = _committed("BENCH_exchange.json")
+    bad = json.loads(json.dumps(rec))
+    bad["derived"]["fused_speedup_f32"] = 0.1
+    fails = check_bench.check_record("BENCH_exchange.json", bad, rec)
+    assert any("perf regression" in f for f in fails)
+
+
+def test_gate_tolerates_machine_variance():
+    """A 30% slower runner is noise, not a regression."""
+    rec = _committed("BENCH_exchange.json")
+    ok = json.loads(json.dumps(rec))
+    ok["derived"]["fused_speedup_f32"] *= 0.7
+    assert check_bench.check_record("BENCH_exchange.json", ok, rec) == []
+
+
+def test_missing_fresh_key_fails():
+    rec = _committed("BENCH_topology.json")
+    bad = json.loads(json.dumps(rec))
+    del bad["derived"]["two_level_param_delta"]
+    fails = check_bench.check_record("BENCH_topology.json", bad, rec)
+    assert any("lacks" in f for f in fails)
+
+
+def test_cli_self_test_exits_zero():
+    r = subprocess.run([sys.executable, TOOL, "--self-test"],
+                       capture_output=True, text=True, timeout=60)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "injected regression caught" in r.stdout

@@ -1,24 +1,10 @@
 """Multi-device distributed semantics, run in subprocesses with
 --xla_force_host_platform_device_count (so the main pytest process keeps its
-single real CPU device, per the dry-run contract)."""
-import os
-import subprocess
-import sys
-import textwrap
-
+single real CPU device, per the dry-run contract). The true multi-PROCESS
+runtime (jax.distributed) is exercised by tests/test_multiprocess.py."""
 import pytest
 
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
-
-
-def _run(script: str, devices: int = 8):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    r = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
-                       capture_output=True, text=True, timeout=900, env=env)
-    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
-    return r.stdout
+from conftest import run_subprocess as _run
 
 
 def test_daso_mesh_step_matches_single_device_simulator():

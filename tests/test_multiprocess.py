@@ -1,0 +1,141 @@
+"""The SPMD-equivalence contract of the multi-process runtime
+(launch/distributed.py): an N-process `jax.distributed` run of the same
+TopologySpec, seed, and fault plan is bit-exact with the single-process
+SPMD run — on both executors. Spawns REAL process groups through
+tools/launch_procs.py (each child pinned to world/N forced CPU devices,
+joined via a localhost coordinator), then compares the metrics JSON and
+final checkpoint bit-for-bit.
+
+These tests use the --tiny arch: at that scale per-device compute sits
+below XLA CPU's intra-op partitioning thresholds, so the only layout-
+dependent code paths are the collectives — which the runtime pins with
+DasoConfig.deterministic_reduce (docs/architecture.md, "Multi-process
+runtime")."""
+import glob
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from conftest import subprocess_env
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+LAUNCHER = os.path.join(REPO, "tools", "launch_procs.py")
+TOPOLOGY = "chip:1 x host:2 x pod:2"  # world 4: R=4 replicas, 3 levels
+
+BASE_ARGS = ["--arch", "llama3.2-1b", "--tiny", "--topology", TOPOLOGY,
+             "--per-node-batch", "2", "--seq-len", "16", "--b-max", "4",
+             "--seed", "0"]
+
+
+def launch(procs: int, train_args, timeout: int = 600) -> None:
+    """Run one process group to completion via the real harness. The
+    harness constructs each child's JAX env explicitly; wiping the
+    variables here proves nothing leaks in from the pytest process."""
+    cmd = [sys.executable, LAUNCHER, "--procs", str(procs),
+           "--timeout", str(timeout), "--"] + BASE_ARGS + train_args
+    env = subprocess_env(devices=1)
+    env.pop("XLA_FLAGS")  # the harness sets the per-child device count
+    r = subprocess.run(cmd, capture_output=True, text=True,
+                       timeout=timeout + 60, env=env, cwd=REPO)
+    assert r.returncode == 0, (f"launch_procs --procs {procs} failed "
+                               f"({r.returncode}):\n{r.stdout}\n{r.stderr}")
+
+
+def load_metrics(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def assert_same_params(dir_a: str, dir_b: str) -> None:
+    files_a = sorted(glob.glob(os.path.join(dir_a, "*.npz")))
+    files_b = sorted(glob.glob(os.path.join(dir_b, "*.npz")))
+    assert files_a and len(files_a) == len(files_b)
+    for fa, fb in zip(files_a, files_b):
+        a, b = np.load(fa), np.load(fb)
+        assert sorted(a.files) == sorted(b.files)
+        for k in a.files:
+            np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+def _equivalence(tmp_path, procs: int, extra, *, steps: int = 16,
+                 ckpt: bool = True):
+    """N-process vs 1-process: bit-identical loss trace (and final params
+    when `ckpt`)."""
+    out = {}
+    for n in (1, procs):
+        m = str(tmp_path / f"metrics_{n}.json")
+        args = extra + ["--steps", str(steps), "--metrics-out", m]
+        if ckpt:
+            args += ["--ckpt", str(tmp_path / f"ckpt_{n}")]
+        launch(n, args)
+        out[n] = load_metrics(m)
+    assert out[1]["losses"] == out[procs]["losses"], (
+        "per-step loss traces diverge between process layouts")
+    assert out[1]["final_loss"] == out[procs]["final_loss"]
+    assert out[1]["sync_fraction"] == out[procs]["sync_fraction"]
+    if ckpt:
+        assert_same_params(str(tmp_path / "ckpt_1"),
+                           str(tmp_path / f"ckpt_{procs}"))
+    return out
+
+
+def test_two_process_macro_bit_exact(tmp_path):
+    """Flagship contract: 2 processes, compiled macro-cycle executor."""
+    out = _equivalence(tmp_path, 2, [])
+    # the schedule actually exercised async + hierarchy, not just warmup
+    assert 0.0 < out[1]["sync_fraction"] < 1.0
+    stats = out[1]["executor_stats"]
+    assert stats["dispatches"] < 16  # macro-cycles, not per-step
+
+
+@pytest.mark.slow
+def test_two_process_per_step_bit_exact(tmp_path):
+    """Same contract on the per-step reference executor. @slow: tier-1
+    keeps the macro flagship only; the CI multiprocess-smoke matrix and
+    the nightly job run this on every PR / night."""
+    _equivalence(tmp_path, 2, ["--executor", "per_step"], steps=10,
+                 ckpt=False)
+
+
+@pytest.mark.slow
+def test_two_process_fault_plan_bit_exact(tmp_path):
+    """Crash + rejoin replayed identically on every process: membership
+    masks, cache invalidations, and rejoin re-seeding are deterministic,
+    so the faulty run is bit-exact across layouts too. @slow: see
+    test_two_process_per_step_bit_exact."""
+    plan = tmp_path / "plan.json"
+    plan.write_text(json.dumps({"events": [
+        {"step": 4, "kind": "crash", "replica": 3},
+        {"step": 8, "kind": "rejoin", "replica": 3}]}))
+    out = _equivalence(tmp_path, 2, ["--fault-plan", str(plan)], steps=12,
+                       ckpt=False)
+    for n in (1, 2):
+        r = out[n]["resilience"]
+        assert r["invalidations"] == 2
+        assert [e["kind"] for e in r["events"]] == ["crash", "rejoin"]
+
+
+@pytest.mark.slow
+def test_four_process_bit_exact(tmp_path):
+    """One process per finest subtree (pod/host), one device each — the CI
+    multiprocess-smoke matrix's 4-process cell."""
+    _equivalence(tmp_path, 4, [], steps=10, ckpt=False)
+
+
+def test_mismatched_process_count_fails_fast(tmp_path):
+    """A topology that cannot be carved into per-process subtrees must be
+    rejected at placement time, before any training step."""
+    cmd = [sys.executable, LAUNCHER, "--procs", "3",
+           "--timeout", "120", "--", "--arch", "llama3.2-1b", "--tiny",
+           "--topology", "chip:1 x host:3 x pod:2", "--steps", "2",
+           "--per-node-batch", "2", "--seq-len", "16"]
+    env = subprocess_env(devices=1)
+    env.pop("XLA_FLAGS")
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=240,
+                       env=env, cwd=REPO)
+    assert r.returncode != 0
+    assert "cut through" in r.stdout + r.stderr

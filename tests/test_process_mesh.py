@@ -1,0 +1,114 @@
+"""Process <-> topology partition contract (launch/mesh.py): under process
+sharding each process owns exactly its subtree of the topology, and
+mismatched fanout/process-count combinations raise precise errors. Pure
+host-side functions — no devices, no subprocesses."""
+import pytest
+
+from repro.launch.mesh import (device_node_path, process_node_paths,
+                               process_replica_slice, replica_unit_sizes,
+                               validate_process_topology)
+from repro.topo import TopologySpec
+
+
+def spec(s):
+    return TopologySpec.load(s)
+
+
+class TestValidate:
+    def test_one_process_always_fits(self):
+        assert validate_process_topology(spec("chip:4 x pod:2"), 1) == 8
+
+    def test_process_per_outer_unit(self):
+        # 2 procs x one pod each, 4 devices per proc
+        assert validate_process_topology(spec("chip:2 x host:2 x pod:2"),
+                                         2) == 4
+
+    def test_process_per_finest_unit(self):
+        # 4 procs x one host each
+        assert validate_process_topology(spec("chip:2 x host:2 x pod:2"),
+                                         4) == 2
+
+    def test_world_not_divisible(self):
+        with pytest.raises(ValueError, match="does not divide"):
+            validate_process_topology(spec("chip:4 x pod:3"), 5)
+
+    def test_replica_straddles_processes(self):
+        # world 8 / 8 procs = 1 device each, but a replica spans 4 chips
+        with pytest.raises(ValueError, match="split a replica"):
+            validate_process_topology(spec("chip:4 x pod:2"), 8)
+
+    def test_block_cuts_through_level_units(self):
+        # R=6 (host:3 x pod:2), 3 procs -> blocks of 2 cut pods of 3
+        with pytest.raises(ValueError, match="cut through"):
+            validate_process_topology(spec("chip:1 x host:3 x pod:2"), 3)
+
+    def test_bad_process_count(self):
+        with pytest.raises(ValueError, match=">= 1"):
+            validate_process_topology(spec("chip:1 x pod:2"), 0)
+
+
+class TestOwnership:
+    def test_unit_sizes(self):
+        s = spec("chip:1 x host:2 x pod:3")
+        assert replica_unit_sizes(s) == {"host": 1, "pod": 2}
+
+    def test_each_process_owns_one_pod(self):
+        s = spec("chip:1 x host:2 x pod:2")
+        assert process_node_paths(s, 2, 0) == ("pod0",)
+        assert process_node_paths(s, 2, 1) == ("pod1",)
+
+    def test_each_process_owns_one_host_subtree(self):
+        s = spec("chip:1 x host:2 x pod:2")
+        assert process_node_paths(s, 4, 0) == ("pod0/host0",)
+        assert process_node_paths(s, 4, 3) == ("pod1/host1",)
+
+    def test_coarse_split_owns_sibling_subtrees(self):
+        s = spec("chip:1 x host:2 x pod:4")
+        assert process_node_paths(s, 2, 1) == ("pod2", "pod3")
+
+    def test_paths_round_trip_through_replicas_of(self):
+        s = spec("chip:2 x host:2 x pod:2")
+        for n_procs in (1, 2, 4):
+            for pid in range(n_procs):
+                rng = process_replica_slice(s, n_procs, pid)
+                got = []
+                for path in process_node_paths(s, n_procs, pid):
+                    got.extend(s.replicas_of(path))
+                assert sorted(got) == list(rng), (n_procs, pid)
+
+    def test_slices_partition_the_replica_axis(self):
+        s = spec("chip:1 x host:3 x pod:2")
+        covered = []
+        for pid in range(2):
+            covered.extend(process_replica_slice(s, 2, pid))
+        assert covered == list(range(s.n_replicas))
+
+    def test_process_id_out_of_range(self):
+        with pytest.raises(ValueError, match="process_id"):
+            process_replica_slice(spec("chip:1 x pod:2"), 2, 2)
+
+
+class TestDevicePaths:
+    def test_device_to_path(self):
+        s = spec("chip:2 x host:2 x pod:2")
+        assert device_node_path(s, 0) == "pod0/host0:chip0"
+        assert device_node_path(s, 3) == "pod0/host1:chip1"
+        assert device_node_path(s, 7) == "pod1/host1:chip1"
+
+    def test_two_level_paths(self):
+        s = spec("chip:2 x pod:2")
+        assert device_node_path(s, 2) == "pod1:chip0"
+
+    def test_out_of_range(self):
+        with pytest.raises(ValueError, match="outside"):
+            device_node_path(spec("chip:2 x pod:2"), 4)
+
+    def test_process_block_is_contiguous_devices(self):
+        """The mesh lowers devices process-major: process p's replica block
+        maps exactly onto its contiguous device block."""
+        s = spec("chip:2 x host:2 x pod:2")
+        local = validate_process_topology(s, 2)
+        for pid in range(2):
+            replicas = set(process_replica_slice(s, 2, pid))
+            devs = range(pid * local, (pid + 1) * local)
+            assert {d // s.local_world for d in devs} == replicas

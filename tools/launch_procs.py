@@ -1,0 +1,192 @@
+#!/usr/bin/env python
+"""Spawn N local coordinator-connected `jax.distributed` processes.
+
+The development/CI harness for the multi-process runtime
+(src/repro/launch/distributed.py): each child is one "host" of the
+topology, pinned to ``world / N`` CPU devices via
+``--xla_force_host_platform_device_count``, joined through a coordinator
+on a free localhost port. Children inherit a *explicitly constructed*
+environment — ``JAX_PLATFORMS`` and ``XLA_FLAGS`` are always set (CPU by
+default) so local runs match CI, and the ``DASO_COORDINATOR`` /
+``DASO_NUM_PROCS`` / ``DASO_PROC_ID`` variables carry the process-group
+identity that `repro.launch.distributed.DistributedConfig.from_env`
+reads.
+
+Everything after ``--`` goes to the target module verbatim
+(``repro.launch.train`` by default); ``--distributed`` is appended for
+the default module if missing. The per-process device count is derived
+from a ``--topology`` spec in the child args when present (world / N),
+or set with ``--local-devices``.
+
+  # 2-process distributed quickstart (matches the CI multiprocess-smoke job)
+  python tools/launch_procs.py --procs 2 -- \
+      --arch llama3.2-1b --topology "chip:1 x host:2 x pod:2" \
+      --steps 40 --per-node-batch 2 --seq-len 16 --metrics-out /tmp/mp.json
+
+  # same run, single process: the SPMD oracle the 2-process run is
+  # bit-exact with (tests/test_multiprocess.py)
+  python tools/launch_procs.py --procs 1 -- ...same args...
+
+Exit status: 0 iff every child exited 0. The first failure terminates the
+rest of the group (a hung coordinator peer would otherwise block forever).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import signal
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def free_port() -> int:
+    with socket.socket(socket.AF_INET, socket.SOCK_STREAM) as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def derive_local_devices(child_args, procs: int) -> int:
+    """world/procs from a --topology spec in the child args, else 1.
+    Handles both the two-token form (``--topology SPEC``) and the
+    ``--topology=SPEC`` spelling."""
+    spec_arg = None
+    for i, a in enumerate(child_args):
+        if a == "--topology":
+            if i + 1 >= len(child_args):
+                raise SystemExit("--topology given without a spec")
+            spec_arg = child_args[i + 1]
+        elif a.startswith("--topology="):
+            spec_arg = a.split("=", 1)[1]
+    if spec_arg is None:
+        return 1
+    sys.path.insert(0, SRC)
+    from repro.topo import TopologySpec
+    world = TopologySpec.load(spec_arg).world
+    if world % procs:
+        raise SystemExit(f"topology world {world} does not divide over "
+                         f"{procs} processes")
+    return world // procs
+
+
+def child_env(procs: int, pid: int, port: int, devices: int) -> dict:
+    """Explicit child environment: the JAX-relevant variables are always
+    set (never silently inherited; `forced_cpu_env` is the one shared
+    definition), plus the DASO_* process-group identity."""
+    sys.path.insert(0, SRC)
+    from repro.launch.distributed import forced_cpu_env
+
+    env = forced_cpu_env(devices)
+    env["DASO_COORDINATOR"] = f"127.0.0.1:{port}"
+    env["DASO_NUM_PROCS"] = str(procs)
+    env["DASO_PROC_ID"] = str(pid)
+    env["PYTHONUNBUFFERED"] = "1"
+    return env
+
+
+def _pump(proc: subprocess.Popen, tag: str, sink) -> None:
+    for line in proc.stdout:
+        sink.write(f"[{tag}] {line}")
+        sink.flush()
+
+
+def launch(procs: int, child_args, *, module: str = "repro.launch.train",
+           local_devices: int | None = None, port: int | None = None,
+           timeout: float = 1800.0, quiet: bool = False) -> int:
+    """Run the process group to completion; returns the worst exit code."""
+    child_args = list(child_args)
+    if module == "repro.launch.train" and "--distributed" not in child_args:
+        child_args.append("--distributed")
+    devices = (local_devices if local_devices is not None
+               else derive_local_devices(child_args, procs))
+    port = port or free_port()
+    cmd = [sys.executable, "-m", module] + child_args
+    children, pumps = [], []
+    sink = open(os.devnull, "w") if quiet else sys.stderr
+    for pid in range(procs):
+        p = subprocess.Popen(cmd, env=child_env(procs, pid, port, devices),
+                             stdout=subprocess.PIPE,
+                             stderr=subprocess.STDOUT, text=True)
+        t = threading.Thread(target=_pump, args=(p, f"p{pid}", sink),
+                             daemon=True)
+        t.start()
+        children.append(p)
+        pumps.append(t)
+
+    deadline = time.monotonic() + timeout
+    codes = [None] * procs
+    try:
+        while any(c is None for c in codes):
+            for i, p in enumerate(children):
+                if codes[i] is None:
+                    codes[i] = p.poll()
+            bad = [i for i, c in enumerate(codes) if c not in (None, 0)]
+            if bad or time.monotonic() > deadline:
+                if time.monotonic() > deadline:
+                    print(f"[launch_procs] timeout after {timeout:.0f}s",
+                          file=sys.stderr)
+                    codes = [c if c is not None else 124 for c in codes]
+                else:
+                    print(f"[launch_procs] process {bad[0]} exited "
+                          f"{codes[bad[0]]}; terminating the group",
+                          file=sys.stderr)
+                for p in children:
+                    if p.poll() is None:
+                        p.send_signal(signal.SIGTERM)
+                break
+            time.sleep(0.05)
+        for p in children:
+            try:
+                p.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                p.kill()
+                p.wait()
+    finally:
+        for t in pumps:
+            t.join(timeout=5)
+        if quiet:
+            sink.close()
+    # a child that was still running at the deadline keeps its timeout
+    # marker (124) even if SIGTERM let it exit 0 — a timed-out group must
+    # never report success
+    codes = [c if c == 124 else p.returncode
+             for c, p in zip(codes, children)]
+    return max(abs(c) for c in codes)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="spawn N local jax.distributed processes "
+                    "(args after -- go to the target module)")
+    ap.add_argument("--procs", type=int, required=True)
+    ap.add_argument("--local-devices", type=int, default=None,
+                    help="CPU devices per process (default: topology "
+                         "world / procs when the child args carry "
+                         "--topology, else 1)")
+    ap.add_argument("--module", default="repro.launch.train",
+                    help="python module to run in every process")
+    ap.add_argument("--port", type=int, default=None,
+                    help="coordinator port (default: pick a free one)")
+    ap.add_argument("--timeout", type=float, default=1800.0,
+                    help="seconds before the whole group is killed")
+    ap.add_argument("--quiet", action="store_true",
+                    help="drop child output (exit status still propagates)")
+    ap.add_argument("child_args", nargs=argparse.REMAINDER,
+                    help="-- then the target module's arguments")
+    args = ap.parse_args()
+    rest = args.child_args
+    if rest and rest[0] == "--":
+        rest = rest[1:]
+    code = launch(args.procs, rest, module=args.module,
+                  local_devices=args.local_devices, port=args.port,
+                  timeout=args.timeout, quiet=args.quiet)
+    sys.exit(code)
+
+
+if __name__ == "__main__":
+    main()
