@@ -122,6 +122,38 @@ def reduction_pct(param_bytes_fp32: float, n_nodes: int,
     return 100.0 * (1.0 - d / h)
 
 
+def overlap_step_s(param_bytes_fp32: float, n_nodes: int, c: ClusterModel,
+                   *, b: int = 4, blocking_frac: float = 0.2,
+                   wire_format: str = "bf16",
+                   dcn_scale: float = 1.0) -> float:
+    """Per-step wall-clock under the MEASURED overlap executor
+    (core/executor.py `_run_overlap`), replacing `daso_step_s`'s assumed
+    `nonblocking_hidden` fraction with the dispatch structure itself: per
+    cycling macro-cycle of B steps, the exchange runs concurrently with
+    the B local steps and the cycle costs whichever finishes last —
+
+        max(B * (t_compute + t_local), t_exchange) / B   per step
+
+    Degenerate regimes (pinned by tests/test_overlap.py):
+      * zero-cost exchange  -> t_compute + t_local exactly (overlap free);
+      * compute-dominated   -> t_compute + t_local (exchange fully hidden);
+      * exchange-dominated  -> t_exchange / B (compute fully hidden — the
+        DCN is the bottleneck and local work rides under it).
+
+    Warm-up/cool-down steps (`blocking_frac`) still pay the blocking sum,
+    same as `daso_step_s`."""
+    if b < 1:
+        raise ValueError(f"cycle length b must be >= 1, got {b}")
+    t_local = ring_allreduce_s(param_bytes_fp32, c.gpus_per_node,
+                               c.nvlink_bw, latency=3e-6)
+    t_exchange = degraded_exchange_s(param_bytes_fp32, n_nodes, c,
+                                     wire_format=wire_format,
+                                     dcn_scale=dcn_scale)
+    t_cycling = max(b * (c.t_compute_s + t_local), t_exchange) / b
+    t_blocking = c.t_compute_s + t_local + t_exchange
+    return blocking_frac * t_blocking + (1 - blocking_frac) * t_cycling
+
+
 # -- N-level topology model ----------------------------------------------------
 # Generalizes the fixed ICI/DCN pair above: each level of a
 # repro.topo.TopologySpec contributes its own bandwidth/latency term, paid

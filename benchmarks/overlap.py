@@ -1,0 +1,140 @@
+"""Overlap microbenchmark: how much of the blocking global exchange the
+double-buffered overlap executor actually hides, measured on the REAL
+2-process gloo runtime (tools/launch_procs.py), not the analytic model.
+
+Three legs of the same tiny-LM run (identical seed/schedule/topology):
+
+  * overlap — ``--overlap one_cycle --dispatch overlap``: the exchange is
+    dispatched un-awaited and runs concurrently with the next B local
+    steps; the executor times how much exchange latency is still VISIBLE
+    after compute finishes (`ExecutorStats.overlap_exchange_visible_s`).
+  * serial  — ``--overlap one_cycle --overlap-serial-exchange``: same
+    numerics (bit-exact, gated), but each exchange is blocked BEFORE the
+    compute program runs (`overlap_exchange_blocking_s`) — the measured
+    cost of NOT overlapping.
+  * off     — ``--overlap off``: the pre-overlap blocking schedule, for
+    the convergence-delta row (overlap merges one cycle stale, so its
+    losses differ; the gate bounds the gap, it does not zero it).
+
+Headline derived metric, gated by tools/check_bench.py:
+
+    overlap_hidden_fraction = 1 - visible_s / blocking_s   (>= 0.3)
+
+Writes BENCH_overlap.json (override with $BENCH_OVERLAP_OUT)."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+LAUNCHER = os.path.join(REPO, "tools", "launch_procs.py")
+
+# 2 replicas across 2 processes, 1 CPU device each: the smallest topology
+# where the outer exchange is a real cross-process gloo collective
+TOPOLOGY = "chip:1 x host:2"
+PROCS = 2
+
+LEGS = {
+    "overlap": ["--overlap", "one_cycle", "--dispatch", "overlap"],
+    "serial": ["--overlap", "one_cycle", "--overlap-serial-exchange"],
+    "off": ["--overlap", "off"],
+}
+
+
+def _run_leg(name: str, extra, metrics_path: str, *, steps: int,
+             timeout: float = 900.0) -> dict:
+    cmd = [sys.executable, LAUNCHER, "--procs", str(PROCS), "--quiet",
+           "--timeout", str(int(timeout) - 60), "--",
+           "--tiny", "--topology", TOPOLOGY, "--steps", str(steps),
+           "--per-node-batch", "2", "--seq-len", "16", "--seed", "0",
+           "--metrics-out", metrics_path] + list(extra)
+    t0 = time.perf_counter()
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout)
+    wall = time.perf_counter() - t0
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"overlap bench leg {name!r} exited {r.returncode}:\n"
+            f"{(r.stderr or r.stdout)[-2000:]}")
+    with open(metrics_path) as f:
+        m = json.load(f)
+    m["wall_s"] = wall
+    return m
+
+
+def emit_rows(emit, *, quick: bool = False) -> None:
+    """Run the three 2-process legs and write the perf record to
+    $BENCH_OVERLAP_OUT (default ./BENCH_overlap.json)."""
+    steps = 24 if quick else 48
+    out = os.environ.get("BENCH_OVERLAP_OUT", "BENCH_overlap.json")
+    tmp = tempfile.mkdtemp(prefix="bench_overlap_")
+    legs = {}
+    try:
+        for name, extra in LEGS.items():
+            legs[name] = _run_leg(name, extra,
+                                  os.path.join(tmp, f"{name}.json"),
+                                  steps=steps)
+    except (RuntimeError, subprocess.TimeoutExpired) as e:
+        emit("overlap_bench_FAILED", 0.0, str(e).replace("\n", " ")[-200:])
+        return
+
+    s_ov = legs["overlap"]["executor_stats"]
+    s_se = legs["serial"]["executor_stats"]
+    visible = s_ov["overlap_exchange_visible_s"]
+    blocking = s_se["overlap_exchange_blocking_s"]
+    hidden = 1.0 - visible / blocking if blocking > 0 else 0.0
+    # serial_exchange changes only WHEN the host waits, never the math:
+    # the two one_cycle legs must be bit-identical step for step
+    loss_delta_serial = max(
+        abs(a - b) for a, b in zip(legs["overlap"]["losses"],
+                                   legs["serial"]["losses"]))
+    loss_delta_off = (legs["overlap"]["final_loss"]
+                      - legs["off"]["final_loss"])
+
+    # analytic cross-check (comm_model.overlap_step_s): at paper scale the
+    # dispatch-structure model must never price overlap above blocking
+    from benchmarks.comm_model import ClusterModel, daso_step_s, \
+        overlap_step_s
+    cm = ClusterModel()
+    pb = 25e6 * 4.0  # ResNet-50-scale f32 parameter bytes
+    model_ratio = (overlap_step_s(pb, 16, cm)
+                   / daso_step_s(pb, 16, cm, nonblocking_hidden=0.0))
+
+    results = []
+    for name, m in legs.items():
+        s = m["executor_stats"]
+        results.append({
+            "name": name, "final_loss": m["final_loss"],
+            "sync_fraction": m["sync_fraction"], "wall_s": m["wall_s"],
+            "overlap_cycles": s["overlap_cycles"],
+            "overlap_compute_s": s["overlap_compute_s"],
+            "overlap_exchange_visible_s": s["overlap_exchange_visible_s"],
+            "overlap_exchange_blocking_s": s["overlap_exchange_blocking_s"],
+        })
+        emit(f"overlap_{name}", m["wall_s"] * 1e6,
+             f"final_loss={m['final_loss']:.4f} "
+             f"cycles={s['overlap_cycles']}")
+
+    derived = {
+        "overlap_cycles": s_ov["overlap_cycles"],
+        "overlap_hidden_fraction": hidden,
+        "overlap_exchange_visible_s": visible,
+        "overlap_exchange_blocking_s": blocking,
+        "loss_delta_overlap_vs_serial": loss_delta_serial,
+        "loss_delta_overlap_vs_off": loss_delta_off,
+        "model_step_ratio_overlap_vs_blocking": model_ratio,
+    }
+    record = {"benchmark": "overlap",
+              "config": {"topology": TOPOLOGY, "procs": PROCS,
+                         "steps": steps, "per_node_batch": 2,
+                         "seq_len": 16, "arch": "tiny", "quick": quick},
+              "results": results, "derived": derived}
+    with open(out, "w") as f:
+        json.dump(record, f, indent=2)
+    emit("overlap_hidden_fraction", blocking * 1e6,
+         f"hidden={hidden:.3f} visible={visible * 1e3:.2f}ms "
+         f"loss_delta_serial={loss_delta_serial:.2e} json={out}")

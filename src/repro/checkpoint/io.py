@@ -29,8 +29,11 @@ import numpy as np
 from repro.core.flatbuf import host_fetchable
 
 # bump when TrainState's layout changes incompatibly; loaders refuse
-# newer-than-known versions instead of misreading them
-TRAIN_STATE_VERSION = 1
+# newer-than-known versions instead of misreading them.
+# v2: records the strategy's overlap mode ("off" | "one_cycle") — an
+# overlap carry has a fourth (pending-snapshot) slot, and resuming it
+# into a non-overlap run (or vice versa) would mis-thread the buffers.
+TRAIN_STATE_VERSION = 2
 
 
 def _flatten(tree, prefix=""):
@@ -138,6 +141,9 @@ class TrainState:
     strategy: str = "daso"
     losses: List[float] = field(default_factory=list)
     extra: Dict[str, Any] = field(default_factory=dict)
+    # DasoConfig.overlap in force when the snapshot was taken: "off" ->
+    # 3-slot carry, "one_cycle" -> 4-slot (… + pending snapshot arena)
+    overlap: str = "off"
     version: int = TRAIN_STATE_VERSION
 
 
@@ -151,17 +157,25 @@ def save_train_state(path: str, state: TrainState) -> None:
             "controller": state.controller,
             "membership": state.membership,
             "strategy": state.strategy,
+            "overlap": state.overlap,
             "losses": [float(x) for x in state.losses],
             "extra": state.extra}
     save_checkpoint(path, arrays, step=state.step,
                     extra={"train_state": host})
 
 
-def load_train_state(path: str, *, carry_shardings=None) -> TrainState:
+def load_train_state(path: str, *, carry_shardings=None,
+                     expect_overlap: Optional[str] = None) -> TrainState:
     """Read a TrainState back. `carry_shardings`: optional pytree of
     NamedShardings matching the carry, for distributed placement. Raises on
     a checkpoint written by a newer TrainState version, or on a plain
-    parameter checkpoint (use `load_checkpoint` for those)."""
+    parameter checkpoint (use `load_checkpoint` for those).
+
+    `expect_overlap`: the overlap mode the resuming run will use; pass it
+    to reject a carry whose buffer layout cannot be resumed into that run
+    (a v1 / overlap="off" single-arena checkpoint has no pending snapshot
+    to resume mid-overlap from, and an overlap checkpoint's fourth slot
+    would silently mis-thread into a 3-slot run)."""
     tree, manifest = load_checkpoint(path)
     host = manifest.get("extra", {}).get("train_state")
     if host is None:
@@ -171,6 +185,16 @@ def load_train_state(path: str, *, carry_shardings=None) -> TrainState:
     if host["version"] > TRAIN_STATE_VERSION:
         raise ValueError(f"TrainState version {host['version']} is newer "
                          f"than supported {TRAIN_STATE_VERSION}")
+    # pre-overlap (v1) checkpoints carry no overlap field: they are
+    # single-arena snapshots, i.e. overlap "off"
+    ck_overlap = host.get("overlap", "off")
+    if expect_overlap is not None and ck_overlap != expect_overlap:
+        raise ValueError(
+            f"checkpoint {path} was written with overlap={ck_overlap!r} "
+            f"(TrainState v{host['version']}) but this run uses "
+            f"overlap={expect_overlap!r}; the carry layouts differ "
+            f"({'3-slot, no pending arena' if ck_overlap == 'off' else '4-slot with pending arena'}). "
+            f"Restart with --overlap {ck_overlap}, or train from scratch.")
     carry = tree["carry"]
     if carry_shardings is not None:
         carry = jax.tree.map(lambda x, s: jax.device_put(x, s),
@@ -182,4 +206,5 @@ def load_train_state(path: str, *, carry_shardings=None) -> TrainState:
                       strategy=host.get("strategy", "daso"),
                       losses=[float(x) for x in host.get("losses", [])],
                       extra=host.get("extra", {}),
+                      overlap=ck_overlap,
                       version=int(host["version"]))

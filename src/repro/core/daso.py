@@ -70,6 +70,15 @@ from repro.optim.optimizers import Optimizer
 
 EXCHANGE_IMPLS = ("fused", "per_leaf")
 
+# Compute/communication overlap of the outermost exchange (DasoConfig
+# .overlap). "off" keeps the paper-faithful in-cycle dataflow — the step
+# graphs are bit-identical to the pre-overlap build. "one_cycle"
+# double-buffers the exchange: each cycle all-reduces the PREVIOUS cycle's
+# parameter snapshot (the `pending` arena) while the next B local steps
+# run, and merges the result one cycle stale via Eq. (1) with the extra
+# buffer age added to S (see `daso_overlap_step`).
+OVERLAP_MODES = ("off", "one_cycle")
+
 
 @dataclass(frozen=True)
 class DasoConfig:
@@ -111,10 +120,18 @@ class DasoConfig:
     # flip on for single-device arenas and compiled TPU kernels.
     exchange_kernels: bool = False
     int8_block: int = 256        # elements per int8 scale block
+    # True asynchronous overlap of the outermost exchange ("off" |
+    # "one_cycle", see OVERLAP_MODES above). With "one_cycle" the strategy
+    # carry grows a fourth slot (the `pending` snapshot arena) and the
+    # schedule switches to the ov_start/ov_sync cycle family.
+    overlap: str = "off"
 
     def __post_init__(self):
         if self.wire_format is not None:
             flatbuf._check_wire_format(self.wire_format)
+        if self.overlap not in OVERLAP_MODES:
+            raise ValueError(f"unknown overlap mode {self.overlap!r}; "
+                             f"expected one of {OVERLAP_MODES}")
         if self.exchange_impl not in EXCHANGE_IMPLS:
             raise ValueError(f"unknown exchange_impl "
                              f"{self.exchange_impl!r}; "
@@ -374,10 +391,12 @@ def global_send(params, *, compress: bool = False, wire_format=None,
 
 
 def global_receive_per_leaf(params, inflight, *, staleness: int,
-                            global_world: int):
+                            global_world: int, extra_staleness: int = 0):
     """Legacy per-leaf Eq. (1) merge (one fused-multiply chain per leaf);
-    equivalence oracle for the fused arena merge."""
-    s2 = jnp.asarray(2.0 * staleness, jnp.float32)
+    equivalence oracle for the fused arena merge. `extra_staleness` adds
+    the overlap executor's one-cycle buffer age to S (0 = pre-overlap
+    math, bit-exact)."""
+    s2 = jnp.asarray(2.0 * (staleness + extra_staleness), jnp.float32)
     p_ = jnp.asarray(float(global_world), jnp.float32)
     denom = s2 + p_
 
@@ -391,12 +410,15 @@ def global_receive_per_leaf(params, inflight, *, staleness: int,
 
 def global_receive(params, inflight, *, staleness: int, global_world,
                    impl: str = "fused", use_kernels: bool = False,
-                   mask=None):
+                   mask=None, extra_staleness: int = 0):
     """Paper Eq. (1): weighted merge of stale global average with current
     local params. staleness S = batches waited; global_world P — a float
     under elastic membership (the effective P of the surviving world,
     `global_world * n_active / n_replicas`), so the merge weighting tracks
     dynamic membership. Dropped replicas' rows stay frozen (`mask`).
+    `extra_staleness` is the overlap executor's one-cycle buffer age — it
+    adds to S in the weighting (the stale buffer really is that much
+    older); 0 keeps the pre-overlap merge bit-exact.
 
     The merge has no collective, so in jnp-land XLA already fuses the
     leaf-wise multiply-add chains into one elementwise pass — packing an
@@ -406,13 +428,15 @@ def global_receive(params, inflight, *, staleness: int, global_world,
     if impl == "per_leaf":
         merged = global_receive_per_leaf(params, inflight,
                                          staleness=staleness,
-                                         global_world=global_world)
+                                         global_world=global_world,
+                                         extra_staleness=extra_staleness)
         return freeze_inactive(merged, params, mask)
     from repro.kernels.ref import eq1_merge_ref
     if not use_kernels:
         merged = jax.tree.map(
             lambda a, b: eq1_merge_ref(a, b, staleness=staleness,
-                                       global_world=global_world),
+                                       global_world=global_world,
+                                       extra_staleness=extra_staleness),
             params, inflight)
         return freeze_inactive(merged, params, mask)
     from repro.kernels.ops import eq1_merge
@@ -420,10 +444,12 @@ def global_receive(params, inflight, *, staleness: int, global_world,
     locals_ = flatbuf.pack(params, layout)
     stales = flatbuf.pack(inflight, layout)
     out = {k: (eq1_merge(a, stales[k], staleness=staleness,
-                         global_world=global_world)
+                         global_world=global_world,
+                         extra_staleness=extra_staleness)
                if jnp.issubdtype(a.dtype, jnp.floating) else
                eq1_merge_ref(a, stales[k], staleness=staleness,
-                             global_world=global_world))
+                             global_world=global_world,
+                             extra_staleness=extra_staleness))
            for k, a in locals_.items()}
     return freeze_inactive(flatbuf.unpack(out, layout), params, mask)
 
@@ -504,6 +530,40 @@ def local_step(loss_fn: Callable, optimizer: Optimizer,
 
 MODES = ("local", "send", "receive", "send_receive", "blocking", "hard_avg")
 
+# Outermost-level actions of the overlap (double-buffered) schedule. The
+# ov_* pair replaces send/receive in the cycling phase when
+# DasoConfig.overlap == "one_cycle":
+#   ov_start  local step + snapshot pending <- params (no exchange yet;
+#             first cycling step, and the restart after any blocking phase)
+#   ov_sync   local step + inflight <- mean(pending_old) [the one outer
+#             all-reduce] + params <- Eq. (1) merge + pending <- params
+OV_MODES = ("local", "ov_start", "ov_sync", "blocking")
+
+
+def _cross_replica_loss(cfg: DasoConfig, mask, n_active: int,
+                        loss_r, *, axis: int = 0):
+    """The scalar training loss the plateau controller consumes: the mean
+    of the per-replica losses over the ACTIVE replicas, reduced along
+    `axis` (the replica axis). Shared by the in-step metric block of
+    `daso_train_step` and the overlap merge program (where the reduction
+    is deferred out of the compute program — it is a cross-process
+    collective on a process-sharded replica axis, and the overlap contract
+    requires the compute program to be collective-free). Deterministic
+    mode uses the same order-fixed chain adds in both places, so deferring
+    the reduction is bit-exact."""
+    det = cfg.deterministic_reduce
+    w_l = (jnp.ones((cfg.n_replicas,), loss_r.dtype) if mask is None
+           else jnp.asarray(mask, loss_r.dtype))
+    if axis != 0:
+        loss_r = jnp.moveaxis(loss_r, axis, 0)
+    shape = (cfg.n_replicas,) + (1,) * (loss_r.ndim - 1)
+    weighted = loss_r * w_l.reshape(shape)
+    if det:
+        return flatbuf.chain_axis0_sum(weighted) / n_active
+    if mask is None:
+        return jnp.mean(loss_r, axis=0)
+    return jnp.sum(weighted, axis=0) / n_active
+
 
 def daso_train_step(loss_fn: Callable, optimizer: Optimizer, cfg: DasoConfig,
                     *, mode: str, staleness: int = 1,
@@ -582,14 +642,7 @@ def daso_train_step(loss_fn: Callable, optimizer: Optimizer, cfg: DasoConfig,
                              deterministic=det), params, mask)
         # the reported loss feeds the plateau controller on the host, so
         # it needs the same transport invariance as the exchanges
-        w_l = (jnp.ones((cfg.n_replicas,), loss_r.dtype) if mask is None
-               else jnp.asarray(mask, loss_r.dtype))
-        if det:
-            loss = flatbuf.chain_axis0_sum(loss_r * w_l) / n_active
-        elif mask is None:
-            loss = jnp.mean(loss_r)
-        else:
-            loss = jnp.sum(loss_r * w_l) / n_active
+        loss = _cross_replica_loss(cfg, mask, n_active, loss_r)
         metrics = {"loss": loss, "loss_per_replica": loss_r}
         for k, v in aux_r.items():
             if isinstance(v, jnp.ndarray) and v.ndim <= 1:
@@ -600,6 +653,145 @@ def daso_train_step(loss_fn: Callable, optimizer: Optimizer, cfg: DasoConfig,
                 else:
                     metrics[k] = jnp.mean(v)
         return params, opt_state, inflight, metrics
+
+    return step
+
+
+def daso_overlap_step(loss_fn: Callable, optimizer: Optimizer,
+                      cfg: DasoConfig, *, mode: str, staleness: int = 1,
+                      extra_staleness: int = 0,
+                      spmd_axis_name: Optional[str] = None, n_micro: int = 1,
+                      membership=None,
+                      inner_syncs: Tuple[Tuple[str, int], ...] = ()):
+    """Build one step variant of the double-buffered overlap schedule
+    (DasoConfig.overlap == "one_cycle"). The carry grows a fourth slot —
+    the `pending` snapshot arena awaiting its exchange:
+
+    step(params_R, opt_R, inflight, pending, batch_R, lr)
+        -> (params_R, opt_R, inflight, pending, metrics)
+
+    `mode` is one of OV_MODES. Semantics (macro-executor order — the
+    compiled overlap dispatch runs the same ops, just split across the
+    exchange / compute / merge programs so the exchange can be in flight
+    during the local steps):
+
+      local     local optimizer step; both buffers pass through
+      ov_start  local step, then pending <- params (snapshot only — the
+                first cycling step has nothing in flight to merge)
+      ov_sync   local step, then inflight <- mean(pending_old) [the ONE
+                outer all-reduce, over the snapshot taken at the previous
+                ov step], params <- Eq. (1) merge with S = staleness +
+                extra_staleness (the snapshot's true age in batches),
+                pending <- merged params
+      blocking  local step + synchronous global average (warm-up /
+                cool-down; buffers pass through — the next cycling phase
+                restarts with ov_start, so a dangling snapshot is never
+                merged)
+
+    The merge lands AFTER the step's local update (off-mode `receive`
+    merges before it): the exchange result arrives at the cycle boundary,
+    which is exactly when the macro executor joins the in-flight
+    collective with the computed params."""
+    assert mode in OV_MODES, mode
+    lstep = local_step(loss_fn, optimizer, spmd_axis_name=spmd_axis_name,
+                       n_micro=n_micro)
+    impl, kern, blk = (cfg.exchange_impl, cfg.exchange_kernels,
+                       cfg.int8_block)
+    det = cfg.deterministic_reduce
+    mask = flatbuf.normalize_membership(membership, cfg.n_replicas)
+    n_active = cfg.n_replicas if mask is None else int(sum(mask))
+    p_eff = (cfg.global_world if mask is None
+             else cfg.global_world * n_active / cfg.n_replicas)
+    for _name, g in inner_syncs:
+        if not 1 < g <= cfg.n_replicas:
+            raise ValueError(f"inner sync {_name!r}: group size {g} outside "
+                             f"2..{cfg.n_replicas}")
+
+    def step(params, opt_state, inflight, pending, batch, lr):
+        new_p, new_o, loss_r, aux_r = lstep(params, opt_state, batch, lr)
+        if mask is not None:
+            new_p = freeze_inactive(new_p, params, mask)
+            new_o = freeze_inactive(new_o, opt_state, mask)
+        params, opt_state = new_p, new_o
+        for _name, g in inner_syncs:
+            params = freeze_inactive(
+                level_group_mean(params, g, use_kernels=kern, mask=mask,
+                                 deterministic=det),
+                params, mask)
+        if mode == "ov_start":
+            pending = params
+        elif mode == "ov_sync":
+            inflight = global_send(
+                pending, wire_format=cfg.wire_format_for(blocking=False),
+                impl=impl, int8_block=blk, use_kernels=kern, mask=mask,
+                deterministic=det)
+            params = global_receive(params, inflight, staleness=staleness,
+                                    extra_staleness=extra_staleness,
+                                    global_world=p_eff, impl=impl,
+                                    use_kernels=kern, mask=mask)
+            pending = params
+        elif mode == "blocking":
+            params = blocking_sync(
+                params, wire_format=cfg.wire_format_for(blocking=True),
+                impl=impl, int8_block=blk, use_kernels=kern, mask=mask,
+                deterministic=det)
+        loss = _cross_replica_loss(cfg, mask, n_active, loss_r)
+        metrics = {"loss": loss, "loss_per_replica": loss_r}
+        for k, v in aux_r.items():
+            if isinstance(v, jnp.ndarray) and v.ndim <= 1:
+                if (mask is not None and v.ndim == 1
+                        and v.shape[0] == cfg.n_replicas):
+                    metrics[k] = jnp.sum(
+                        v * jnp.asarray(mask, v.dtype)) / n_active
+                else:
+                    metrics[k] = jnp.mean(v)
+        return params, opt_state, inflight, pending, metrics
+
+    return step
+
+
+def daso_overlap_compute_step(loss_fn: Callable, optimizer: Optimizer,
+                              cfg: DasoConfig, *,
+                              spmd_axis_name: Optional[str] = None,
+                              n_micro: int = 1, membership=None,
+                              inner_syncs: Tuple[Tuple[str, int],
+                                                 ...] = ()):
+    """The compute-program half of one overlap-dispatched macro-cycle:
+
+    step(params_R, opt_R, batch_R, lr) -> (params_R, opt_R, metrics)
+
+    A plain local step (plus any inner-level group syncs) that is — by
+    construction — free of collectives over the OUTER (cross-process)
+    replica axes: the scalar-loss reduction of `daso_train_step` is a
+    cross-replica reduce, so it is deferred to the merge program
+    (`_cross_replica_loss` over the stacked per-replica losses, bit-exact
+    in deterministic mode). That is the property that makes dispatching
+    this program concurrently with the in-flight gloo exchange safe on the
+    multi-process runtime (launch/distributed.py, dispatch="overlap"):
+    at most one collective-bearing program is ever in flight, so the PR-5
+    shared-TCP-pair interleaving failure cannot occur. Aux metrics are
+    dropped here for the same reason (their means reduce over the replica
+    axis). Inner-level syncs stay: the overlap dispatch validator requires
+    them to be process-local (launch.distributed.check_overlap_topology),
+    where they lower to in-process collectives gloo never sees."""
+    lstep = local_step(loss_fn, optimizer, spmd_axis_name=spmd_axis_name,
+                       n_micro=n_micro)
+    kern = cfg.exchange_kernels
+    det = cfg.deterministic_reduce
+    mask = flatbuf.normalize_membership(membership, cfg.n_replicas)
+
+    def step(params, opt_state, batch, lr):
+        new_p, new_o, loss_r, _aux_r = lstep(params, opt_state, batch, lr)
+        if mask is not None:
+            new_p = freeze_inactive(new_p, params, mask)
+            new_o = freeze_inactive(new_o, opt_state, mask)
+        params, opt_state = new_p, new_o
+        for _name, g in inner_syncs:
+            params = freeze_inactive(
+                level_group_mean(params, g, use_kernels=kern, mask=mask,
+                                 deterministic=det),
+                params, mask)
+        return params, opt_state, {"loss_per_replica": loss_r}
 
     return step
 

@@ -34,6 +34,7 @@ per-step reference path that the equivalence tests compare against
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -42,15 +43,36 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import flatbuf
-from repro.core.daso import (DasoConfig, daso_train_step, dereplicate_params,
-                             replica_divergence, replicate_params,
-                             sync_train_step)
-from repro.core.schedule import DasoController, Mode
+from repro.core.daso import (DasoConfig, _cross_replica_loss,
+                             daso_overlap_compute_step, daso_overlap_step,
+                             daso_train_step, dereplicate_params,
+                             global_receive, global_send, replica_divergence,
+                             replicate_params, sync_train_step)
+from repro.core.schedule import (DasoController, Mode, is_ov_mode, join_mode,
+                                 split_mode, split_ov)
 from repro.optim.optimizers import Optimizer
 
 # A cycle shape is the static fingerprint of a macro-cycle: one
 # (mode, staleness) pair per step. Distinct shapes compile distinct programs.
 CycleShape = Tuple[Tuple[str, int], ...]
+
+# Mode-token prefix for the collective-free compute half of an
+# overlap-dispatched cycle ("ovc:local", "ovc:local+host", ...). These
+# tokens exist only inside OverlapCycle.compute_shape — the controller
+# never emits them and they never enter its history.
+OVERLAP_COMPUTE_PREFIX = "ovc:"
+
+
+@dataclass(frozen=True)
+class OverlapCycle:
+    """Execution recipe for one overlap-dispatched macro-cycle: launch the
+    exchange program on the pending arena, run the compute program (free of
+    outer-axis collectives) while the exchange is in flight, then merge the
+    exchange result into the computed params one cycle stale — Eq. (1) with
+    effective S = staleness + extra_staleness."""
+    compute_shape: CycleShape
+    staleness: int
+    extra_staleness: int
 
 
 @dataclass(frozen=True)
@@ -201,6 +223,13 @@ class DasoStrategy(Strategy):
             mask, self.cfg.n_replicas)
         self._steps.clear()
 
+    @property
+    def overlap(self) -> bool:
+        """True when this strategy runs the double-buffered overlap
+        schedule (cfg.overlap != "off"): 4-slot carry, OV_* mode tokens,
+        and — on the macro executor — async exchange dispatch."""
+        return self.cfg.overlap != "off"
+
     def init_carry(self, params0):
         params = replicate_params(params0, self.cfg.n_replicas)
         opt_state = replicate_params(self.optimizer.init(params0),
@@ -208,7 +237,12 @@ class DasoStrategy(Strategy):
         # warm buffer; a real copy (not an alias of params) so the executor
         # can donate both leaves of the carry independently
         inflight = jax.tree.map(jnp.array, params)
-        return (params, opt_state, inflight)
+        if not self.overlap:
+            return (params, opt_state, inflight)
+        # overlap: the fourth slot is the pending snapshot arena — the
+        # params image awaiting its (next cycle's) exchange
+        pending = jax.tree.map(jnp.array, params)
+        return (params, opt_state, inflight, pending)
 
     def finalize_params(self, carry):
         # under elastic membership row 0 may be a dead replica's frozen
@@ -217,16 +251,65 @@ class DasoStrategy(Strategy):
                else self._membership.index(1.0))
         return dereplicate_params(carry[0], index=idx)
 
+    def _inner_syncs_of(self, inner: Tuple[str, ...]):
+        """Map the inner-level names of a hierarchical mode token to the
+        (name, group_size) pairs core/daso.py consumes. The base strategy
+        has no topology, so any inner sync is a planning bug."""
+        if inner:
+            raise ValueError(
+                f"mode carries inner-level syncs {inner!r} but strategy "
+                f"{self.name!r} has no topology; use hier_daso")
+        return ()
+
     def _build_raw(self, mode, staleness):
-        """Hook for subclasses that enrich the step build (HierDasoStrategy
-        splits hierarchical mode tokens and adds inner-level syncs); the
-        carry-unpacking wrapper in `build_step` stays shared."""
+        """Build the 3-slot-carry step for one (mode, staleness) variant;
+        the carry-unpacking wrapper in `build_step` stays shared across
+        subclasses (HierDasoStrategy only overrides `_inner_syncs_of`)."""
+        outer, inner = split_mode(mode)
         return daso_train_step(self.loss_fn, self.optimizer, self.cfg,
-                               mode=mode, staleness=staleness,
+                               mode=outer, staleness=staleness,
                                n_micro=self.n_micro,
-                               membership=self._membership)
+                               membership=self._membership,
+                               inner_syncs=self._inner_syncs_of(inner))
+
+    def _build_raw_overlap(self, mode, staleness):
+        """Overlap counterpart of `_build_raw`: 4-slot carry, OV_* tokens,
+        extra staleness decoded from the token's "~E" suffix."""
+        outer, inner = split_mode(mode)
+        base, extra = split_ov(outer)
+        return daso_overlap_step(self.loss_fn, self.optimizer, self.cfg,
+                                 mode=base, staleness=staleness,
+                                 extra_staleness=extra,
+                                 n_micro=self.n_micro,
+                                 membership=self._membership,
+                                 inner_syncs=self._inner_syncs_of(inner))
 
     def build_step(self, mode, staleness):
+        if mode.startswith(OVERLAP_COMPUTE_PREFIX):
+            # compute half of an overlap dispatch: 2-slot carry, no outer
+            # collectives (loss reduction deferred to the merge program)
+            _, inner = split_mode(mode[len(OVERLAP_COMPUTE_PREFIX):])
+            raw = daso_overlap_compute_step(
+                self.loss_fn, self.optimizer, self.cfg,
+                n_micro=self.n_micro, membership=self._membership,
+                inner_syncs=self._inner_syncs_of(inner))
+
+            def cstep(carry, batch, lr):
+                params, opt_state = carry
+                params, opt_state, m = raw(params, opt_state, batch, lr)
+                return (params, opt_state), m
+
+            return cstep
+        if self.overlap:
+            raw = self._build_raw_overlap(mode, staleness)
+
+            def ostep(carry, batch, lr):
+                params, opt_state, inflight, pending = carry
+                params, opt_state, inflight, pending, m = raw(
+                    params, opt_state, inflight, pending, batch, lr)
+                return (params, opt_state, inflight, pending), m
+
+            return ostep
         raw = self._build_raw(mode, staleness)
 
         def step(carry, batch, lr):
@@ -236,6 +319,72 @@ class DasoStrategy(Strategy):
             return (params, opt_state, inflight), m
 
         return step
+
+    # -- overlap dispatch recipe -------------------------------------------
+    def overlap_cycle(self, shape: CycleShape) -> Optional[OverlapCycle]:
+        """Return the overlap-dispatch recipe for `shape`, or None when the
+        shape must run as one ordinary compiled program. Dispatchable
+        shapes are the controller's overlap cycling cycles: a run of local
+        steps ending in one ov_sync. Everything else — blocking phases,
+        the lone ov_start opener, window-cut all-local cycles — has no
+        in-flight exchange to hide and the ordinary path is already
+        correct for it (the OV_* step variants pass the buffers
+        through)."""
+        if not self.overlap or not shape:
+            return None
+        last_outer, _ = split_mode(shape[-1][0])
+        base, extra = split_ov(last_outer)
+        if base != Mode.OV_SYNC:
+            return None
+        for mode, _stale in shape[:-1]:
+            if split_mode(mode)[0] != Mode.LOCAL:
+                return None
+        compute_shape = tuple(
+            (OVERLAP_COMPUTE_PREFIX
+             + join_mode(Mode.LOCAL, split_mode(mode)[1]), 1)
+            for mode, _stale in shape)
+        return OverlapCycle(compute_shape=compute_shape,
+                            staleness=shape[-1][1],
+                            extra_staleness=extra)
+
+    def overlap_exchange_fn(self):
+        """pending -> inflight: the ONE outer-level collective of an
+        overlap cycle, compiled as its own program so the executor can put
+        it in flight before the compute program."""
+        cfg, mask = self.cfg, self._membership
+
+        def exchange(pending):
+            return global_send(
+                pending, wire_format=cfg.wire_format_for(blocking=False),
+                impl=cfg.exchange_impl, int8_block=cfg.int8_block,
+                use_kernels=cfg.exchange_kernels, mask=mask,
+                deterministic=cfg.deterministic_reduce)
+
+        return exchange
+
+    def overlap_merge_fn(self, staleness: int, extra_staleness: int):
+        """(params, inflight, loss_per_replica (L,R)) -> (merged params,
+        per-step loss (L,)). Runs after compute and exchange both land:
+        Eq. (1) with effective S = staleness + extra_staleness, plus the
+        cross-replica loss reduction the compute program deferred (same
+        chained order as the per-step path — bit-exact under
+        deterministic_reduce)."""
+        cfg, mask = self.cfg, self._membership
+        n_active = self.n_active()
+        p_eff = (cfg.global_world if mask is None
+                 else cfg.global_world * n_active / cfg.n_replicas)
+
+        def merge(params, inflight, loss_r):
+            params = global_receive(params, inflight, staleness=staleness,
+                                    extra_staleness=extra_staleness,
+                                    global_world=p_eff,
+                                    impl=cfg.exchange_impl,
+                                    use_kernels=cfg.exchange_kernels,
+                                    mask=mask)
+            loss = _cross_replica_loss(cfg, mask, n_active, loss_r, axis=1)
+            return params, loss
+
+        return merge
 
     def plan_cycle(self, step, max_len):
         return CyclePlan(step, self.controller.plan_cycle(step, max_len))
@@ -324,6 +473,15 @@ class ExecutorStats:
     compiles: int = 0          # distinct cycle shapes compiled
     fallback_steps: int = 0    # steps run on the per-step fallback path
     invalidations: int = 0     # cache flushes (membership changes etc.)
+    # overlap-dispatch timing (wall-clock, host-observed):
+    overlap_cycles: int = 0           # cycles run via the overlap dispatch
+    overlap_compute_s: float = 0.0    # time until compute outputs are ready
+    # extra wait for the in-flight exchange AFTER compute finished — the
+    # part of the exchange that compute failed to hide
+    overlap_exchange_visible_s: float = 0.0
+    # exchange time when forced serial (serial_exchange=True): the
+    # blocking-cost baseline the hidden fraction is measured against
+    overlap_exchange_blocking_s: float = 0.0
 
     def dispatches_per_step(self) -> float:
         total = self.steps + self.fallback_steps
@@ -354,7 +512,7 @@ class MacroCycleExecutor:
 
     def __init__(self, strategy: Strategy, *, max_cycle_len: int = 32,
                  donate: bool = True, tail_fallback: bool = True,
-                 placement=None):
+                 placement=None, serial_exchange: bool = False):
         self.strategy = strategy
         self.max_cycle_len = max_cycle_len
         self.donate = donate
@@ -362,9 +520,17 @@ class MacroCycleExecutor:
         # optional launch.distributed.MeshPlacement: batches staged onto
         # the global topology mesh instead of the local default device
         self.placement = placement
+        # debug/measurement knob: block on the exchange BEFORE running
+        # compute, turning the overlap dispatch into its blocking
+        # equivalent — numerics identical, overlap_exchange_blocking_s
+        # measured. benchmarks/overlap.py uses this as the baseline leg.
+        self.serial_exchange = serial_exchange
         self.stats = ExecutorStats()
         self._programs: Dict[CycleShape, Callable] = {}
         self._per_step: Dict[Tuple[str, int], Callable] = {}
+        # jitted overlap exchange/merge programs ("exchange", or
+        # ("merge", S, E)); dropped by invalidate() with everything else
+        self._ov_fns: Dict[object, Callable] = {}
 
     # -- compilation -------------------------------------------------------
     @property
@@ -385,9 +551,10 @@ class MacroCycleExecutor:
         old variants are stale. Returns the number of programs dropped;
         subsequent cycles recompile against the strategy's current step
         fns."""
-        n = len(self._programs) + len(self._per_step)
+        n = len(self._programs) + len(self._per_step) + len(self._ov_fns)
         self._programs.clear()
         self._per_step.clear()
+        self._ov_fns.clear()
         self.stats.invalidations += 1
         return n
 
@@ -417,7 +584,13 @@ class MacroCycleExecutor:
                 lambda *xs: jnp.concatenate(xs, axis=0), *chunks)
             return carry, metrics
 
-        donate = (0,) if self.donate else ()
+        # overlap forbids donation: the pending slot aliases the params
+        # object in the carry (the snapshot is by-reference), and the
+        # exchange program reads pending concurrently with compute — a
+        # donated buffer could be reused while the collective still
+        # needs it
+        donate = ((0,) if self.donate
+                  and not getattr(self.strategy, "overlap", False) else ())
         return jax.jit(program, donate_argnums=donate)
 
     def _per_step_fn(self, mode: str, stale: int) -> Callable:
@@ -432,6 +605,9 @@ class MacroCycleExecutor:
         """Execute one macro-cycle. `batches`/`lrs` carry a leading axis of
         length len(plan). Returns (carry, stacked per-step metrics)."""
         shape = plan.shape
+        ov = getattr(self.strategy, "overlap_cycle", lambda s: None)(shape)
+        if ov is not None:
+            return self._run_overlap(carry, ov, batches, lrs)
         if (self.tail_fallback and is_tail and len(shape) > 1
                 and shape not in self._programs):
             return self._run_per_step(carry, shape, batches, lrs)
@@ -440,6 +616,70 @@ class MacroCycleExecutor:
         self.stats.dispatches += 1
         self.stats.steps += len(shape)
         self.stats.cycles += 1
+        return carry, metrics
+
+    def _ov_exchange(self) -> Callable:
+        if "exchange" not in self._ov_fns:
+            self._ov_fns["exchange"] = jax.jit(
+                self.strategy.overlap_exchange_fn())
+        return self._ov_fns["exchange"]
+
+    def _ov_merge(self, staleness: int, extra: int) -> Callable:
+        key = ("merge", staleness, extra)
+        if key not in self._ov_fns:
+            self._ov_fns[key] = jax.jit(
+                self.strategy.overlap_merge_fn(staleness, extra))
+        return self._ov_fns[key]
+
+    def _run_overlap(self, carry, ov: OverlapCycle, batches, lrs):
+        """Execute one overlap cycle as three programs: (1) the exchange
+        on the pending snapshot, (2) the collective-free compute run over
+        the cycle's batches, (3) the stale merge + deferred loss
+        reduction. Under JAX's async dispatch (1) and (2) execute
+        concurrently — (2) has no data dependence on (1), and by the
+        overlap-safety contract it carries no outer-axis collective that
+        could interleave with the exchange on the wire. The host blocks on
+        compute first, then on the exchange, so the extra wait attributed
+        to the exchange is exactly the part compute failed to hide
+        (`overlap_exchange_visible_s`). With `serial_exchange` the
+        exchange is awaited up front — same numerics, blocking cost
+        (`overlap_exchange_blocking_s`) — which is the baseline leg of
+        benchmarks/overlap.py's hidden-fraction measurement."""
+        params, opt_state, _inflight_old, pending = carry
+        exchange = self._ov_exchange()
+        merge = self._ov_merge(ov.staleness, ov.extra_staleness)
+        program = self.program_for(ov.compute_shape)
+        if self.serial_exchange:
+            t0 = time.perf_counter()
+            inflight = exchange(pending)
+            jax.block_until_ready(inflight)
+            self.stats.overlap_exchange_blocking_s += time.perf_counter() - t0
+            t1 = time.perf_counter()
+            (params, opt_state), m = program((params, opt_state),
+                                             batches, lrs)
+            jax.block_until_ready(params)
+            self.stats.overlap_compute_s += time.perf_counter() - t1
+        else:
+            t0 = time.perf_counter()
+            inflight = exchange(pending)          # in flight, not awaited
+            (params, opt_state), m = program((params, opt_state),
+                                             batches, lrs)
+            jax.block_until_ready(params)
+            t1 = time.perf_counter()
+            self.stats.overlap_compute_s += t1 - t0
+            jax.block_until_ready(inflight)
+            self.stats.overlap_exchange_visible_s += time.perf_counter() - t1
+        params, loss = merge(params, inflight, m["loss_per_replica"])
+        metrics = dict(m)
+        metrics["loss"] = loss
+        # pending <- merged params (by reference — donation is off under
+        # overlap, so the alias is safe): the next cycle's exchange sends
+        # exactly the params this cycle's merge produced
+        carry = (params, opt_state, inflight, params)
+        self.stats.dispatches += 3
+        self.stats.steps += len(ov.compute_shape)
+        self.stats.cycles += 1
+        self.stats.overlap_cycles += 1
         return carry, metrics
 
     def _run_per_step(self, carry, shape: CycleShape, batches, lrs):

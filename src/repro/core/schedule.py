@@ -38,6 +38,31 @@ class Mode:
     SEND_RECEIVE = "send_receive"
     BLOCKING = "blocking"
     HARD_AVG = "hard_avg"
+    # double-buffered overlap schedule (DasoConfig.overlap == "one_cycle"):
+    # OV_START snapshots params into the pending arena (first cycling step —
+    # nothing in flight to merge yet); OV_SYNC launches the exchange on the
+    # PREVIOUS snapshot, merges it one cycle stale, and re-snapshots. An
+    # OV_SYNC token may carry extra staleness as a "~E" suffix ("ov_sync~2"),
+    # see split_ov.
+    OV_START = "ov_start"
+    OV_SYNC = "ov_sync"
+
+
+def split_ov(outer: str) -> Tuple[str, int]:
+    """Split an outer-level overlap token into (base, extra_staleness):
+    ``"ov_sync~2"`` -> ``("ov_sync", 2)``, ``"ov_sync"`` -> ``("ov_sync",
+    0)``. Non-overlap tokens pass through with extra 0. The extra rides in
+    the token so each distinct staleness compiles (and caches) as its own
+    step variant — Eq. (1)'s S is a compile-time constant."""
+    base, _, extra = outer.partition("~")
+    return base, int(extra) if extra else 0
+
+
+def is_ov_mode(mode: str) -> bool:
+    """True when the step's outer-level action belongs to the overlap
+    family (works on full hierarchical tokens like ``"ov_sync~1+host"``)."""
+    base, _ = split_ov(split_mode(mode)[0])
+    return base in (Mode.OV_START, Mode.OV_SYNC)
 
 
 def split_mode(mode: str) -> Tuple[str, Tuple[str, ...]]:
@@ -66,6 +91,10 @@ class DasoController:
     _last_send: int = field(init=False, default=-(10 ** 9))
     _inflight_since: Optional[int] = field(init=False, default=None)
     _recv_staleness: int = field(init=False, default=1)
+    # overlap schedule: step of the last pending-arena snapshot (ov_start or
+    # ov_sync). None = the next cycling step must ov_start (fresh run, or a
+    # blocking phase just invalidated the snapshot).
+    _ov_last: Optional[int] = field(init=False, default=None)
     _best: float = field(init=False, default=float("inf"))
     _since_improve: int = field(init=False, default=0)
     _win_acc: List[float] = field(init=False, default_factory=list)
@@ -115,9 +144,14 @@ class DasoController:
         it feeds Eq. (1) as S)."""
         ph = self.phase(step)
         if ph in ("warmup", "cooldown"):
-            # a blocking step completes any dangling exchange trivially
+            # a blocking step completes any dangling exchange trivially —
+            # and supersedes any pending overlap snapshot (the full-world
+            # average is fresher than anything it could merge)
             self._inflight_since = None
+            self._ov_last = None
             mode, stale = Mode.BLOCKING, 1
+        elif self.cfg.overlap != "off":
+            mode, stale = self._overlap_mode(step)
         else:
             recv = (self._inflight_since is not None
                     and step - self._inflight_since >= self._w)
@@ -138,6 +172,26 @@ class DasoController:
                     (False, True): Mode.RECEIVE,
                     (True, True): Mode.SEND_RECEIVE}[(send, recv)]
         self.history.append((step, mode, self._b, self._w))
+        return mode, stale
+
+    def _overlap_mode(self, step: int) -> Tuple[str, int]:
+        """Cycling-phase decision under overlap == "one_cycle". Every B
+        steps an OV_SYNC merges the exchange launched on the snapshot taken
+        B steps earlier — so the merge is always one full cycle stale. The
+        snapshot's true age (step - last snapshot) splits into the Eq. (1)
+        staleness S = min(W, age) the blocking schedule would have charged
+        plus the overlap's extra ``age - S``, carried in the mode token
+        ("ov_sync~E") so each distinct age compiles as its own variant."""
+        if self._ov_last is None:
+            self._ov_last = step
+            return Mode.OV_START, 1
+        age = step - self._ov_last
+        if age < self._b:
+            return Mode.LOCAL, 1
+        self._ov_last = step
+        stale = min(self._w, age)
+        extra = age - stale
+        mode = f"{Mode.OV_SYNC}~{extra}" if extra else Mode.OV_SYNC
         return mode, stale
 
     # -- macro-cycle planning ----------------------------------------------
@@ -170,18 +224,29 @@ class DasoController:
         ``(send, receive@S, local, local)`` and a warm-up cycle is a run of
         ``blocking``. Cutting at these boundaries is what makes executing
         the whole cycle as one compiled program equivalent to the per-step
-        path: no host-side feedback can change the schedule mid-cycle."""
+        path: no host-side feedback can change the schedule mid-cycle.
+
+        Under overlap the cycling cut flips: the cycle is cut AFTER an
+        ov_start/ov_sync step instead of before the next send, so a
+        B=4 overlap cycle is ``(local, local, local, ov_sync)`` — the
+        exchange the executor launched at the cycle's start is merged by
+        its last step, and the next cycle starts with a fresh snapshot in
+        flight. (Window/max_len cuts can still yield all-local cycles;
+        those simply dispatch without an exchange program.)"""
         n_max = max(1, min(max_len, self.window_remaining()))
         phase0 = self.phase(start_step)
+        ov = self.cfg.overlap != "off"
         shape = []
         while len(shape) < n_max:
             t = start_step + len(shape)
             if shape:
                 if self.phase(t) != phase0:
                     break
-                if phase0 == "cycling" and self._would_send(t):
+                if phase0 == "cycling" and not ov and self._would_send(t):
                     break
             shape.append(self.mode_for_step(t))
+            if ov and phase0 == "cycling" and is_ov_mode(shape[-1][0]):
+                break
         return tuple(shape)
 
     # -- plateau-driven B/W schedule ----------------------------------------
@@ -244,8 +309,8 @@ class DasoController:
 
     # -- checkpoint state --------------------------------------------------
     _STATE_FIELDS = ("_b", "_w", "_last_send", "_inflight_since",
-                     "_recv_staleness", "_best", "_since_improve",
-                     "_dcn_scale")
+                     "_recv_staleness", "_ov_last", "_best",
+                     "_since_improve", "_dcn_scale")
 
     def state_dict(self) -> dict:
         """Full mutable state as a JSON-serializable dict (part of the
@@ -262,7 +327,9 @@ class DasoController:
 
     def load_state_dict(self, sd: dict) -> None:
         for k in self._STATE_FIELDS:
-            setattr(self, k, sd[k])
+            # pre-overlap checkpoints lack _ov_last; keep the fresh default
+            # (None -> next cycling step re-snapshots via ov_start)
+            setattr(self, k, sd.get(k, getattr(self, k)))
         self._win_acc = [float(x) for x in sd["win_acc"]]
         self.history = [tuple(h) for h in sd["history"]]
         self.events = [tuple(e) for e in sd.get("events", [])]
@@ -276,9 +343,12 @@ class DasoController:
         links and are tallied separately (`level_sync_counts`)."""
         if not self.history:
             return 0.0
-        touched = sum(1 for (_, m, _, _) in self.history
-                      if split_mode(m)[0] in (Mode.SEND, Mode.SEND_RECEIVE,
-                                              Mode.BLOCKING))
+        touched = sum(
+            1 for (_, m, _, _) in self.history
+            if split_ov(split_mode(m)[0])[0] in (Mode.SEND,
+                                                 Mode.SEND_RECEIVE,
+                                                 Mode.BLOCKING,
+                                                 Mode.OV_SYNC))
         return touched / len(self.history)
 
     def level_sync_counts(self) -> Dict[str, int]:
@@ -289,8 +359,9 @@ class DasoController:
         counts: Dict[str, int] = {"_outer": 0}
         for (_, m, _, _) in self.history:
             outer, inner = split_mode(m)
-            if outer in (Mode.SEND, Mode.SEND_RECEIVE, Mode.BLOCKING,
-                         Mode.HARD_AVG):
+            if split_ov(outer)[0] in (Mode.SEND, Mode.SEND_RECEIVE,
+                                      Mode.BLOCKING, Mode.HARD_AVG,
+                                      Mode.OV_SYNC):
                 counts["_outer"] += 1
             for name in inner:
                 counts[name] = counts.get(name, 0) + 1

@@ -52,12 +52,16 @@ def _eq1_kernel(local_ref, stale_ref, out_ref, *, s2, p):
 
 
 def eq1_merge(local, stale, *, staleness: int, global_world: int,
-              block: int = 1024, interpret: bool = False):
+              extra_staleness: int = 0, block: int = 1024,
+              interpret: bool = False):
     """local, stale: (rows, block) arena views, same shape/dtype.
-    Returns the Eq. (1) merge in local's dtype."""
+    Returns the Eq. (1) merge in local's dtype. `extra_staleness` adds the
+    overlap executor's one-cycle buffer age to S (0 = the pre-overlap
+    kernel, bit-exact)."""
     rows, bk = local.shape
     assert bk == block, (local.shape, block)
-    kernel = functools.partial(_eq1_kernel, s2=2.0 * staleness,
+    kernel = functools.partial(_eq1_kernel,
+                               s2=2.0 * (staleness + extra_staleness),
                                p=float(global_world))
     return pl.pallas_call(
         kernel,

@@ -65,16 +65,21 @@ def rglru_scan(a, gx, h0, *, block_w: int = 512,
 # -- fused flat-buffer exchange kernels (core/flatbuf.py arenas) ---------------
 
 @functools.partial(jax.jit, static_argnames=("staleness", "global_world",
-                                             "block", "interpret"))
+                                             "extra_staleness", "block",
+                                             "interpret"))
 def eq1_merge(local, stale, *, staleness: int, global_world: int,
-              block: int = 1024, interpret: bool | None = None):
+              extra_staleness: int = 0, block: int = 1024,
+              interpret: bool | None = None):
     """Paper Eq. (1) merge fused over an arena of any shape (trailing axis
-    is the packed axis). Output in local's dtype."""
+    is the packed axis). Output in local's dtype. `extra_staleness` is the
+    overlap executor's one-cycle buffer age, added to S (0 = the
+    pre-overlap kernel, bit-exact)."""
     interpret = INTERPRET if interpret is None else interpret
     lr, meta = _pad_rows(local, block)
     sr, _ = _pad_rows(stale, block)
     out = _comm.eq1_merge(lr, sr, staleness=staleness,
-                          global_world=global_world, block=block,
+                          global_world=global_world,
+                          extra_staleness=extra_staleness, block=block,
                           interpret=interpret)
     return _unpad_rows(out, meta)
 

@@ -45,10 +45,17 @@ def ssm_scan_ref(x, dt, A, Bm, Cm, h0):
     return ys.swapaxes(0, 1), h
 
 
-def eq1_merge_ref(local, stale, *, staleness, global_world):
+def eq1_merge_ref(local, stale, *, staleness, global_world,
+                  extra_staleness=0):
     """Paper Eq. (1) over an arena (or any array): f32 accumulation,
-    result in local's dtype."""
-    s2 = 2.0 * staleness
+    result in local's dtype.
+
+    `extra_staleness` is the extra age the stale buffer accrued beyond the
+    scheduled wait — the overlap executor merges each exchange one cycle
+    late, so the effective S in Eq. (1) is `staleness + extra_staleness`.
+    The default 0 keeps this function bit-identical to the pre-overlap
+    kernel (tests/test_overlap.py pins that property)."""
+    s2 = 2.0 * (staleness + extra_staleness)
     p = float(global_world)
     merged = (s2 * local.astype(jnp.float32)
               + p * stale.astype(jnp.float32)) / (s2 + p)

@@ -48,6 +48,9 @@ from repro.launch.mesh import make_topology_mesh, validate_process_topology
 ENV_COORDINATOR = "DASO_COORDINATOR"
 ENV_NUM_PROCS = "DASO_NUM_PROCS"
 ENV_PROC_ID = "DASO_PROC_ID"
+ENV_DISPATCH = "DASO_DISPATCH"
+
+DISPATCH_MODES = ("serial", "overlap")
 
 _initialized = False
 
@@ -55,15 +58,38 @@ _initialized = False
 @dataclass(frozen=True)
 class DistributedConfig:
     """Who we are in the process group. `num_processes == 1` means the
-    single-process SPMD simulation — same code path, no coordinator."""
+    single-process SPMD simulation — same code path, no coordinator.
+
+    `dispatch` picks the executable-dispatch discipline for multi-process
+    gloo runs:
+
+      * "serial" (default) — async dispatch disabled; at most one
+        executable in flight per process. Safe for every program mix:
+        concurrent executables' gloo collectives would interleave on the
+        same shared TCP pairs and abort (see `initialize`).
+      * "overlap" — async dispatch left ON so the overlap executor can
+        keep the exchange program in flight under the compute program.
+        Safe ONLY because that executor's dispatch discipline guarantees
+        at most one collective-bearing program in flight at a time (the
+        compute program is collective-free over the outer axis and the
+        merge data-depends on the exchange); `launch/train.py` therefore
+        refuses this mode unless the strategy runs with overlap on.
+    """
     coordinator: Optional[str] = None     # "host:port"
     num_processes: int = 1
     process_id: int = 0
+    dispatch: str = "serial"
+
+    def __post_init__(self):
+        if self.dispatch not in DISPATCH_MODES:
+            raise ValueError(f"unknown dispatch mode {self.dispatch!r}; "
+                             f"expected one of {DISPATCH_MODES}")
 
     @classmethod
     def from_env(cls, *, coordinator: Optional[str] = None,
                  num_processes: Optional[int] = None,
-                 process_id: Optional[int] = None) -> "DistributedConfig":
+                 process_id: Optional[int] = None,
+                 dispatch: Optional[str] = None) -> "DistributedConfig":
         """Resolve explicit flag values, falling back to the DASO_* env
         vars `tools/launch_procs.py` exports for its children."""
         coord = coordinator or os.environ.get(ENV_COORDINATOR)
@@ -71,13 +97,15 @@ class DistributedConfig:
             os.environ.get(ENV_NUM_PROCS, "1"))
         pid = process_id if process_id is not None else int(
             os.environ.get(ENV_PROC_ID, "0"))
+        disp = dispatch or os.environ.get(ENV_DISPATCH, "serial")
         if n > 1 and not coord:
             raise ValueError(
                 f"{n} processes need a coordinator address "
                 f"(--coordinator host:port or ${ENV_COORDINATOR})")
         if not 0 <= pid < n:
             raise ValueError(f"process_id {pid} outside 0..{n - 1}")
-        return cls(coordinator=coord, num_processes=n, process_id=pid)
+        return cls(coordinator=coord, num_processes=n, process_id=pid,
+                   dispatch=disp)
 
 
 def initialize(cfg: DistributedConfig) -> None:
@@ -94,20 +122,56 @@ def initialize(cfg: DistributedConfig) -> None:
         jax.config.update("jax_cpu_collectives_implementation", "gloo")
     except AttributeError:
         pass
-    try:
-        # async dispatch lets consecutive executables be in flight at
-        # once; their gloo collectives then interleave on the same TCP
-        # pairs and abort with size-mismatch errors (observed: "op.
-        # preamble.length <= op.nbytes" / "connection reset by peer"
-        # flakes under load). Serial dispatch pins one collective in
-        # flight per process — the same order on every process.
-        jax.config.update("jax_cpu_enable_async_dispatch", False)
-    except AttributeError:
-        pass
+    if cfg.dispatch == "serial":
+        try:
+            # async dispatch lets consecutive executables be in flight at
+            # once; their gloo collectives then interleave on the same TCP
+            # pairs and abort with size-mismatch errors (observed: "op.
+            # preamble.length <= op.nbytes" / "connection reset by peer"
+            # flakes under load). Serial dispatch pins one collective in
+            # flight per process — the same order on every process.
+            jax.config.update("jax_cpu_enable_async_dispatch", False)
+        except AttributeError:
+            pass
+    # dispatch == "overlap": async dispatch stays on. The overlap
+    # executor's discipline (one collective-bearing program in flight,
+    # enforced by construction — see DistributedConfig.dispatch) is what
+    # stands in for the serial-dispatch guarantee.
     jax.distributed.initialize(coordinator_address=cfg.coordinator,
                                num_processes=cfg.num_processes,
                                process_id=cfg.process_id)
     _initialized = True
+
+
+def check_overlap_topology(spec, n_procs: int) -> None:
+    """Fail fast when a topology cannot run under dispatch="overlap".
+
+    The overlap compute program may carry INNER-level group syncs; those
+    are safe concurrently with the in-flight outer exchange only when
+    every inner group lies within one process (they then lower to
+    in-process collectives gloo never sees). Each process owns a
+    contiguous block of R // n_procs replica rows, so an inner level with
+    cumulative group size g is process-local iff g divides that block
+    evenly. Raises with the offending level spelled out — the actionable
+    alternative being dispatch="serial" (correct for every topology,
+    just no overlap win)."""
+    if n_procs <= 1:
+        return
+    rows_per_proc, rem = divmod(spec.n_replicas, n_procs)
+    if rem:
+        return  # validate_process_topology already rejects this split
+    for name in spec.inner_names():  # intermediate replica levels
+        g = spec.group_size(name)
+        if rows_per_proc % g != 0:
+            raise ValueError(
+                f"dispatch='overlap' needs process-local inner syncs, but "
+                f"level {name!r} groups {g} replicas while each of the "
+                f"{n_procs} processes holds only {rows_per_proc} "
+                f"({spec.to_str()}): a {name!r} group sync would be a "
+                f"cross-process gloo collective racing the in-flight "
+                f"exchange. Use --dispatch serial for this topology, or "
+                f"launch with a process count whose per-process replica "
+                f"block is a multiple of {g}.")
 
 
 def is_coordinator() -> bool:

@@ -69,6 +69,27 @@ def main():
                     choices=["fused", "per_leaf"],
                     help="fused = one flat-buffer collective per exchange; "
                          "per_leaf = legacy reference path")
+    ap.add_argument("--overlap", default="off",
+                    choices=["off", "one_cycle"],
+                    help="double-buffered compute/communication overlap: "
+                         "one_cycle hides each global exchange behind the "
+                         "next B local steps and merges it one cycle stale "
+                         "(Eq. (1) with the snapshot's true age as S); off "
+                         "is bit-exact with pre-overlap runs. daso family "
+                         "only")
+    ap.add_argument("--overlap-serial-exchange", action="store_true",
+                    help="debug/benchmark: block on each overlap exchange "
+                         "before running compute — identical numerics, no "
+                         "hiding; the baseline leg of benchmarks/"
+                         "overlap.py")
+    ap.add_argument("--dispatch", default=None,
+                    choices=["serial", "overlap"],
+                    help="multi-process executable dispatch (default "
+                         "$DASO_DISPATCH or serial): serial pins one "
+                         "program in flight per process (safe for every "
+                         "program mix on gloo); overlap leaves async "
+                         "dispatch on so the overlap executor can hide the "
+                         "exchange — requires --overlap one_cycle")
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--nodes", type=int, default=4,
                     help="DASO replicas (paper nodes / pods); superseded "
@@ -138,7 +159,19 @@ def main():
             ap.error("--distributed derives its mesh from --topology")
         dist = DistributedConfig.from_env(coordinator=args.coordinator,
                                           num_processes=args.procs,
-                                          process_id=args.proc_id)
+                                          process_id=args.proc_id,
+                                          dispatch=args.dispatch)
+        if dist.dispatch == "overlap" and args.overlap == "off":
+            # fail BEFORE jax.distributed comes up: async dispatch with the
+            # blocking schedule would put two collective-bearing programs
+            # in flight on the shared gloo TCP pairs (the PR-5 interleaving
+            # failure). Only the overlap executor's dispatch discipline
+            # makes "overlap" safe.
+            ap.error("--dispatch overlap requires --overlap one_cycle: "
+                     "without the overlap executor's one-collective-in-"
+                     "flight discipline, async dispatch interleaves gloo "
+                     "collectives on shared TCP pairs and aborts. Use "
+                     "--dispatch serial (default) for blocking schedules.")
         initialize(dist)  # before anything touches devices
         if not is_coordinator():
             # one process speaks for the group; files are proc-0-only too
@@ -179,6 +212,11 @@ def main():
         say(f"[train] topology: {spec.to_str()} -> R={spec.n_replicas} "
             f"world={spec.world} inner_periods="
             f"{derive_inner_periods(spec, b_max=b_eff)}")
+    if args.distributed and spec is not None and dist.dispatch == "overlap":
+        # inner-level group syncs ride inside the overlap compute program;
+        # they must be process-local or they'd race the in-flight exchange
+        from repro.launch.distributed import check_overlap_topology
+        check_overlap_topology(spec, dist.num_processes)
     R, per = args.nodes, args.per_node_batch
 
     def daso_data(step):
@@ -199,6 +237,8 @@ def main():
         topology=spec.to_str() if spec is not None else None, lr=args.lr,
         executor=args.executor, max_cycle_len=args.max_cycle_len,
         wire_format=args.wire_format, exchange_impl=args.exchange_impl,
+        overlap=args.overlap,
+        overlap_serial_exchange=args.overlap_serial_exchange,
         ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt,
         resume_from=args.resume, distributed=args.distributed)
     lr_fn = warmup_linear_scaled(args.lr / (R * args.local_world),
@@ -217,6 +257,12 @@ def main():
         if args.executor != "macro":
             ap.error("--fault-plan drives the macro-cycle supervisor; "
                      "--executor per_step is not supported with it")
+        if args.overlap != "off":
+            ap.error("--fault-plan with --overlap is not supported: a "
+                     "membership change mid-cycle would merge a pending "
+                     "snapshot taken under the old active set (stale "
+                     "exchange weights). Run fault plans with the blocking "
+                     "schedule (--overlap off).")
         from repro.checkpoint.io import TrainState, save_train_state
         from repro.resilience.faults import FaultPlan
         from repro.resilience.supervisor import run_with_faults

@@ -9,10 +9,11 @@ interface with zero special-casing. The only deltas vs `DasoStrategy`:
     per-level phase vector (mode tokens like ``"send+host"`` — still plain
     strings, so the executor's shape-keyed compile cache, the history
     records, and the checkpoint format are unchanged);
-  * `build_step` splits the token and bakes the syncing levels'
-    `level_group_mean` calls into the step variant (`inner_syncs` on
-    `daso_train_step`), each one collective per arena over exactly that
-    level's replica groups.
+  * `_inner_syncs_of` resolves the token's inner-level names against the
+    topology, baking the syncing levels' `level_group_mean` calls into
+    every step variant (`inner_syncs` on `daso_train_step` and its overlap
+    counterparts), each one collective per arena over exactly that level's
+    replica groups.
 
 With a 2-level topology there are no intermediate levels, every token is a
 legacy mode string, and this class builds byte-identical step functions to
@@ -21,9 +22,8 @@ stock `DasoStrategy` for that case anyway.
 """
 from __future__ import annotations
 
-from repro.core.daso import daso_train_step
 from repro.core.executor import DasoStrategy, register_strategy
-from repro.core.schedule import HierDasoController, split_mode
+from repro.core.schedule import HierDasoController
 from repro.topo.spec import TopologySpec
 
 
@@ -52,12 +52,7 @@ class HierDasoStrategy(DasoStrategy):
                          **kw)
         self.topo = topo
 
-    def _build_raw(self, mode, staleness):
-        outer, inner = split_mode(mode)
-        inner_syncs = tuple((name, self.topo.group_size(name))
-                            for name in inner)
-        return daso_train_step(self.loss_fn, self.optimizer, self.cfg,
-                               mode=outer, staleness=staleness,
-                               n_micro=self.n_micro,
-                               membership=self._membership,
-                               inner_syncs=inner_syncs)
+    def _inner_syncs_of(self, inner):
+        # the one topology-aware hook: every step-build path in the base
+        # class (plain, overlap, overlap-compute) routes through it
+        return tuple((name, self.topo.group_size(name)) for name in inner)

@@ -60,6 +60,17 @@ class TrainLoopConfig:
     # one-collective-per-leaf reference path.
     wire_format: Optional[str] = None
     exchange_impl: str = "fused"
+    # double-buffered compute/communication overlap (core/daso.py
+    # OVERLAP_MODES): "off" = the blocking schedule, bit-exact with
+    # pre-overlap runs; "one_cycle" = each global exchange runs on the
+    # previous sync's snapshot, hidden behind the next B local steps and
+    # merged one cycle stale (Eq. (1) with the snapshot's true age as S).
+    # Only meaningful for the daso family.
+    overlap: str = "off"
+    # debug/benchmark knob: execute overlap cycles with the exchange
+    # blocked BEFORE compute (same numerics, no hiding) — the baseline leg
+    # of benchmarks/overlap.py's hidden-fraction measurement
+    overlap_serial_exchange: bool = False
     # full-state checkpointing: every `ckpt_every` steps (0 = off) a
     # TrainState lands in `ckpt_dir/step_XXXXXXXX/`; `resume_from` points at
     # one such directory to continue the run deterministically.
@@ -104,6 +115,10 @@ def build_strategy(loss_fn: Callable, cfg: TrainLoopConfig,
     if cfg.strategy == "sync":
         if cfg.topology is not None:
             resolve_topology(cfg)  # raises with the explanation
+        if cfg.overlap != "off":
+            raise ValueError("overlap is a daso-family schedule; the sync "
+                             "baseline has no non-blocking exchange to "
+                             "overlap (drop --overlap or switch strategy)")
         return make_strategy("sync", loss_fn, optimizer)
     spec = resolve_topology(cfg)
     n_replicas = spec.n_replicas if spec is not None else cfg.n_replicas
@@ -120,6 +135,7 @@ def build_strategy(loss_fn: Callable, cfg: TrainLoopConfig,
         total_steps=cfg.n_steps,
         wire_format=cfg.wire_format,
         exchange_impl=cfg.exchange_impl,
+        overlap=cfg.overlap,
         # distributed runs pin every cross-replica reduction to the
         # order-fixed chain formulation so the result is independent of
         # the process layout (the N-proc == 1-proc bit-exactness contract)
@@ -171,7 +187,11 @@ def run_training(loss_fn: Callable, params0, data_fn: Callable,
 
     start_step, carry, prior_losses = 0, None, []
     if cfg.resume_from:
-        ts = load_train_state(cfg.resume_from)
+        # reject carry-layout mismatches up front: a pre-overlap (v1 /
+        # overlap="off") checkpoint has no pending arena to resume
+        # mid-overlap from, and vice versa
+        expect = cfg.overlap if cfg.strategy != "sync" else "off"
+        ts = load_train_state(cfg.resume_from, expect_overlap=expect)
         if ts.strategy != cfg.strategy:
             raise ValueError(f"checkpoint was written by strategy "
                              f"{ts.strategy!r}, run requests "
@@ -204,6 +224,7 @@ def run_training(loss_fn: Callable, params0, data_fn: Callable,
                             if getattr(strategy, "membership", None)
                             is not None else None),
                 strategy=cfg.strategy,
+                overlap=(cfg.overlap if cfg.strategy != "sync" else "off"),
                 losses=prior_losses + seg_losses)
             save_train_state(ckpt_step_dir(cfg.ckpt_dir, step), state)
 
@@ -215,9 +236,9 @@ def run_training(loss_fn: Callable, params0, data_fn: Callable,
             ckpt_every=cfg.ckpt_every, ckpt_cb=ckpt_cb,
             placement=placement)
     else:
-        executor = MacroCycleExecutor(strategy,
-                                      max_cycle_len=cfg.max_cycle_len,
-                                      placement=placement)
+        executor = MacroCycleExecutor(
+            strategy, max_cycle_len=cfg.max_cycle_len, placement=placement,
+            serial_exchange=cfg.overlap_serial_exchange)
         result = run_compiled_training(
             strategy, params0, data_fn, lr_fn, cfg.n_steps,
             executor=executor, start_step=start_step, carry=carry,
