@@ -133,6 +133,84 @@ print(f"CSV resilience_resume {load_s * 1e6:.1f} "
       f"from_step={ts.step} param_delta={param_delta:.2e} "
       f"loss_delta={loss_delta:.2e}")
 
+# -- live kill e2e: real SIGKILL, supervised regroup, oracle delta ------
+# the same scenario tests/test_live_faults.py asserts, measured: a 2-proc
+# group loses rank 1 to SIGKILL at step 6, the launcher detects, regroups
+# onto 1 proc over the full world, and the finished params are compared
+# against the simulated fault-plan oracle
+import glob
+import subprocess
+import sys
+import tempfile
+
+REPO = os.environ["BENCH_REPO_ROOT"]
+LAUNCHER = os.path.join(REPO, "tools", "launch_procs.py")
+WATCHDOG_S = 120.0
+live_steps = 12 if QUICK else 16
+tmp = tempfile.mkdtemp(prefix="bench_live_")
+base_args = ["--arch", "llama3.2-1b", "--tiny",
+             "--topology", "chip:1 x host:2 x pod:2",
+             "--per-node-batch", "2", "--seq-len", "16", "--b-max", "4",
+             "--seed", "0"]
+report_path = os.path.join(tmp, "report.json")
+live_ckpt = os.path.join(tmp, "ck_live")
+live_metrics = os.path.join(tmp, "m_live.json")
+r = subprocess.run(
+    [sys.executable, LAUNCHER, "--procs", "2", "--kill", "1:6",
+     "--watchdog", str(WATCHDOG_S), "--timeout", "600", "--quiet",
+     "--report", report_path, "--"] + base_args +
+    ["--steps", str(live_steps), "--ckpt", live_ckpt, "--ckpt-every", "1",
+     "--metrics-out", live_metrics],
+    capture_output=True, text=True, timeout=700, cwd=REPO)
+if r.returncode != 0:
+    raise SystemExit(f"live supervised run failed ({r.returncode}):\\n"
+                     f"{r.stdout[-2000:]}\\n{r.stderr[-2000:]}")
+with open(report_path) as f:
+    live_report = json.load(f)
+with open(live_metrics) as f:
+    live_meta = json.load(f)["resilience"]["live"]
+
+plan_path = os.path.join(tmp, "oracle_plan.json")
+with open(plan_path, "w") as f:
+    json.dump({"events": [{"step": live_meta["crash_step"],
+                           "kind": "crash", "replica": rr}
+                          for rr in live_meta["dead_replicas"]]}, f)
+oracle_ckpt = os.path.join(tmp, "ck_oracle")
+r = subprocess.run(
+    [sys.executable, LAUNCHER, "--procs", "1", "--timeout", "600",
+     "--quiet", "--"] + base_args +
+    ["--steps", str(live_steps), "--fault-plan", plan_path,
+     "--ckpt", oracle_ckpt, "--ckpt-every", "1"],
+    capture_output=True, text=True, timeout=700, cwd=REPO)
+if r.returncode != 0:
+    raise SystemExit(f"live oracle run failed ({r.returncode}):\\n"
+                     f"{r.stdout[-2000:]}\\n{r.stderr[-2000:]}")
+
+live_delta = 0.0
+pairs = list(zip(sorted(glob.glob(os.path.join(live_ckpt, "*.npz"))),
+                 sorted(glob.glob(os.path.join(oracle_ckpt, "*.npz")))))
+assert pairs, "no final checkpoints to compare"
+for fa, fb in pairs:
+    a, b = np.load(fa), np.load(fb)
+    for k in a.files:
+        if k == "__save_id__":
+            continue
+        live_delta = max(live_delta,
+                         float(np.max(np.abs(a[k].astype(np.float64)
+                                             - b[k].astype(np.float64)))))
+timings = live_report["timings"]
+results.append({"name": "live_kill", "steps": live_steps,
+                "kill": live_report["kill"],
+                "dead_replicas": live_report["dead_replicas"],
+                "crash_step": live_meta["crash_step"],
+                "epochs": live_report["epochs"], "timings": timings,
+                "oracle_param_delta": live_delta})
+print(f"CSV resilience_live_kill {timings['total_s'] * 1e6:.1f} "
+      f"detect={timings['detect_s']:.2f}s "
+      f"regroup={timings['regroup_s']:.2f}s "
+      f"resume={timings['resume_s']:.2f}s "
+      f"oracle_delta={live_delta:.1e}")
+
 by = {r["name"]: r for r in results}
 derived = {
     "loss_delta_k1": k1["final_loss"] - base["final_loss"],
@@ -148,6 +226,14 @@ derived = {
     # controller stretches B to compensate (schedule.notify_dcn_scale)
     "degraded_exchange_cost_ratio":
         exchange_fn(R, 0.25) / exchange_fn(R, 1.0),
+    # live fault plane: measured on a real SIGKILL + regroup (see above)
+    "live_detect_s": timings["detect_s"],
+    "live_regroup_s": timings["regroup_s"],
+    "live_resume_s": timings["resume_s"],
+    "live_total_s": timings["total_s"],
+    "live_detect_within_budget":
+        1.0 if timings["detect_s"] < WATCHDOG_S else 0.0,
+    "live_oracle_param_delta": live_delta,
 }
 record = {"benchmark": "resilience",
           "config": {"n_replicas": R, "n_steps": n_steps,
@@ -166,16 +252,19 @@ print(f"CSV resilience_recovery_mean "
 
 def emit_rows(emit, *, quick=False):
     """Recovery/loss-delta microbench + checkpoint resume round-trip on a
-    single device (the supervisor host path is device-count independent).
-    Writes the perf record to $BENCH_RESILIENCE_OUT (default
-    ./BENCH_resilience.json)."""
+    single device (the supervisor host path is device-count independent),
+    plus the live-kill e2e (2-process SIGKILL + supervised regroup, timed
+    and oracle-compared). Writes the perf record to $BENCH_RESILIENCE_OUT
+    (default ./BENCH_resilience.json)."""
+    repo = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
     env = dict(os.environ)
-    env["PYTHONPATH"] = (SRC + os.pathsep
-                         + os.path.join(os.path.dirname(__file__), "..")
+    env["PYTHONPATH"] = (SRC + os.pathsep + repo
                          + os.pathsep + env.get("PYTHONPATH", ""))
     env["BENCH_QUICK"] = "1" if quick else "0"
+    env["BENCH_REPO_ROOT"] = repo
     r = subprocess.run([sys.executable, "-c", textwrap.dedent(_SCRIPT)],
-                       capture_output=True, text=True, timeout=600, env=env)
+                       capture_output=True, text=True, timeout=1500,
+                       env=env)
     if r.returncode != 0:
         emit("resilience_microbench_FAILED", 0.0, r.stderr[-200:])
         return

@@ -14,13 +14,23 @@ Two layers:
     data cursor, elastic-membership mask, and the loss trace so far. A run
     resumed from a TrainState reproduces the uninterrupted run's losses and
     final params exactly at f32 (tests/test_resilience.py).
+
+Writes are crash-safe: each file lands via tmp-file + fsync + atomic
+rename, and the arrays/manifest pair shares a save token so a process
+SIGKILLed between the two renames leaves a checkpoint that is *detected* as
+torn (`CheckpointCorruptError`) rather than silently mixed. Loaders can
+fall back to the newest intact `step_XXXXXXXX/` sibling
+(`load_train_state(..., fallback=True)` / `load_latest_train_state`) — the
+contract the live fault-tolerance plane (resilience/runtime.py) resumes
+through after killing a real process mid-save.
 """
 from __future__ import annotations
 
 import json
 import os
+import re
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -74,11 +84,40 @@ def _unflatten(flat: Dict[str, Any]):
     return fix(root)
 
 
+class CheckpointCorruptError(ValueError):
+    """A checkpoint directory is unreadable: missing/truncated files, an
+    unparseable manifest, or an arrays/manifest pair from two different
+    saves (a crash landed between the two atomic renames)."""
+
+
+def _atomic_write(path: str, write_fn) -> None:
+    """Crash-safe single-file write: tmp sibling + fsync + atomic rename.
+    A SIGKILL at any point leaves either the old complete file or the new
+    complete file at `path`, never a truncated one."""
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "wb") as f:
+        write_fn(f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    # fsync the directory so the rename itself survives a host crash
+    dfd = os.open(os.path.dirname(os.path.abspath(path)) or ".", os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
+
+
 def save_checkpoint(path: str, tree, *, step: int = 0,
                     extra: Optional[dict] = None) -> None:
     os.makedirs(path, exist_ok=True)
     flat = _flatten(tree)
-    arrays, manifest = {}, {"step": step, "dtypes": {}, "extra": extra or {}}
+    # arrays and manifest are renamed-in independently; the shared token
+    # (stored in BOTH files) is what lets the loader detect a torn pair
+    save_id = f"{step}-{os.getpid()}-{os.urandom(4).hex()}"
+    arrays = {"__save_id__": np.frombuffer(save_id.encode(), np.uint8)}
+    manifest = {"step": step, "dtypes": {}, "extra": extra or {},
+                "save_id": save_id}
     for k, v in flat.items():
         # process-aware contract: in a multi-process run, arrays sharded
         # across processes must be gathered BEFORE the (process-0-only)
@@ -95,22 +134,68 @@ def save_checkpoint(path: str, tree, *, step: int = 0,
         if arr.dtype == jnp.bfloat16:
             arr = arr.astype(np.float32)  # npz-safe container (exact widen)
         arrays[k] = arr
-    np.savez(os.path.join(path, "arrays.npz"), **arrays)
-    with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
+    _atomic_write(os.path.join(path, "arrays.npz"),
+                  lambda f: np.savez(f, **arrays))
+    _atomic_write(os.path.join(path, "manifest.json"),
+                  lambda f: f.write(json.dumps(manifest, indent=1)
+                                    .encode()))
 
 
 def load_checkpoint(path: str, *, shardings=None):
     """Returns (tree, manifest). shardings: optional matching pytree of
-    NamedShardings for distributed placement."""
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(path, "arrays.npz"))
+    NamedShardings for distributed placement. Raises
+    `CheckpointCorruptError` on a missing/truncated/torn checkpoint (a
+    crash mid-save) so callers can fall back to an older snapshot."""
+    man_path = os.path.join(path, "manifest.json")
+    npz_path = os.path.join(path, "arrays.npz")
+    try:
+        with open(man_path) as f:
+            manifest = json.load(f)
+    except FileNotFoundError:
+        raise CheckpointCorruptError(f"{path}: no manifest.json "
+                                     "(incomplete checkpoint)")
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CheckpointCorruptError(f"{path}: manifest.json is truncated "
+                                     f"or corrupt ({e})")
+    try:
+        data = np.load(npz_path)
+        files = list(data.files)
+    except FileNotFoundError:
+        raise CheckpointCorruptError(f"{path}: no arrays.npz "
+                                     "(incomplete checkpoint)")
+    except Exception as e:  # zipfile.BadZipFile, truncated streams, ...
+        raise CheckpointCorruptError(f"{path}: arrays.npz is unreadable "
+                                     f"({e})")
+    man_id = manifest.get("save_id")
+    if man_id is not None:
+        if "__save_id__" not in files:
+            raise CheckpointCorruptError(
+                f"{path}: manifest carries save_id {man_id!r} but "
+                "arrays.npz has no token — torn write (arrays from an "
+                "older save)")
+        npz_id = bytes(data["__save_id__"]).decode()
+        if npz_id != man_id:
+            raise CheckpointCorruptError(
+                f"{path}: arrays save_id {npz_id!r} != manifest save_id "
+                f"{man_id!r} — a crash landed between the two renames")
     flat = {}
-    for k in data.files:
-        arr = data[k]
-        dt = manifest["dtypes"][k]
-        flat[k] = jnp.asarray(arr, dtype=dt)
+    try:
+        for k in files:
+            if k == "__save_id__":
+                continue
+            arr = data[k]
+            dt = manifest["dtypes"][k]
+            flat[k] = jnp.asarray(arr, dtype=dt)
+    except KeyError as e:
+        raise CheckpointCorruptError(f"{path}: arrays/manifest key "
+                                     f"mismatch ({e})")
+    except Exception as e:  # truncated member streams surface on read
+        raise CheckpointCorruptError(f"{path}: arrays.npz member "
+                                     f"unreadable ({e})")
+    if set(manifest["dtypes"]) - set(flat):
+        missing = sorted(set(manifest["dtypes"]) - set(flat))
+        raise CheckpointCorruptError(f"{path}: arrays.npz is missing "
+                                     f"manifest keys {missing[:4]}...")
     tree = _unflatten(flat)
     if shardings is not None:
         tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
@@ -164,8 +249,24 @@ def save_train_state(path: str, state: TrainState) -> None:
                     extra={"train_state": host})
 
 
+_STEP_DIR = re.compile(r"^step_(\d{8})$")
+
+
+def list_train_state_dirs(ckpt_dir: str) -> List[str]:
+    """`step_XXXXXXXX/` snapshot directories under `ckpt_dir`, NEWEST
+    first (by step number — the order the corruption fallback probes)."""
+    try:
+        names = os.listdir(ckpt_dir)
+    except FileNotFoundError:
+        return []
+    steps = sorted((m.group(1) for m in map(_STEP_DIR.match, names) if m),
+                   reverse=True)
+    return [os.path.join(ckpt_dir, f"step_{s}") for s in steps]
+
+
 def load_train_state(path: str, *, carry_shardings=None,
-                     expect_overlap: Optional[str] = None) -> TrainState:
+                     expect_overlap: Optional[str] = None,
+                     fallback: bool = False) -> TrainState:
     """Read a TrainState back. `carry_shardings`: optional pytree of
     NamedShardings matching the carry, for distributed placement. Raises on
     a checkpoint written by a newer TrainState version, or on a plain
@@ -175,7 +276,33 @@ def load_train_state(path: str, *, carry_shardings=None,
     to reject a carry whose buffer layout cannot be resumed into that run
     (a v1 / overlap="off" single-arena checkpoint has no pending snapshot
     to resume mid-overlap from, and an overlap checkpoint's fourth slot
-    would silently mis-thread into a 3-slot run)."""
+    would silently mis-thread into a 3-slot run).
+
+    `fallback`: when `path` turns out truncated/torn (a crash mid-save),
+    walk its `step_XXXXXXXX/` siblings newest-first and resume from the
+    newest intact one instead of crashing — the post-SIGKILL recovery
+    contract. The substituted path is reported via a warning print; an
+    older-but-valid state only costs recomputing the lost steps."""
+    if fallback:
+        try:
+            return load_train_state(path, carry_shardings=carry_shardings,
+                                    expect_overlap=expect_overlap)
+        except CheckpointCorruptError as e:
+            for cand in list_train_state_dirs(os.path.dirname(
+                    os.path.abspath(path))):
+                if os.path.abspath(cand) == os.path.abspath(path):
+                    continue
+                try:
+                    st = load_train_state(cand,
+                                          carry_shardings=carry_shardings,
+                                          expect_overlap=expect_overlap)
+                except CheckpointCorruptError:
+                    continue
+                print(f"[checkpoint] {path} is corrupt ({e}); falling "
+                      f"back to newest intact snapshot {cand} "
+                      f"(step {st.step})")
+                return st
+            raise
     tree, manifest = load_checkpoint(path)
     host = manifest.get("extra", {}).get("train_state")
     if host is None:
@@ -208,3 +335,24 @@ def load_train_state(path: str, *, carry_shardings=None,
                       extra=host.get("extra", {}),
                       overlap=ck_overlap,
                       version=int(host["version"]))
+
+
+def load_latest_train_state(ckpt_dir: str, *, carry_shardings=None,
+                            expect_overlap: Optional[str] = None
+                            ) -> Tuple[str, TrainState]:
+    """Newest intact TrainState under `ckpt_dir` (skipping any snapshot a
+    crash left truncated/torn). Returns (path, state). This is what a
+    regrouped epoch resumes from after a real process death — the victim
+    may have been killed mid-save, so "latest" must mean "latest that
+    still loads"."""
+    skipped = []
+    for cand in list_train_state_dirs(ckpt_dir):
+        try:
+            return cand, load_train_state(cand,
+                                          carry_shardings=carry_shardings,
+                                          expect_overlap=expect_overlap)
+        except CheckpointCorruptError as e:
+            skipped.append(f"{os.path.basename(cand)}: {e}")
+    raise CheckpointCorruptError(
+        f"{ckpt_dir}: no intact TrainState snapshot found"
+        + (f" (skipped {'; '.join(skipped)})" if skipped else ""))

@@ -512,7 +512,8 @@ class MacroCycleExecutor:
 
     def __init__(self, strategy: Strategy, *, max_cycle_len: int = 32,
                  donate: bool = True, tail_fallback: bool = True,
-                 placement=None, serial_exchange: bool = False):
+                 placement=None, serial_exchange: bool = False,
+                 health=None):
         self.strategy = strategy
         self.max_cycle_len = max_cycle_len
         self.donate = donate
@@ -520,6 +521,11 @@ class MacroCycleExecutor:
         # optional launch.distributed.MeshPlacement: batches staged onto
         # the global topology mesh instead of the local default device
         self.placement = placement
+        # optional resilience.runtime.HealthMonitor: every completed cycle
+        # is a progress report (heartbeat step + watchdog deadline push) —
+        # the hook that lets a supervised run detect a peer death wedging
+        # a gloo collective instead of hanging forever
+        self.health = health
         # debug/measurement knob: block on the exchange BEFORE running
         # compute, turning the overlap dispatch into its blocking
         # equivalent — numerics identical, overlap_exchange_blocking_s
@@ -737,6 +743,11 @@ def dispatch_planned_cycle(ex: MacroCycleExecutor, carry, plan: CyclePlan,
     cycle_losses = [float(host["loss"][j]) for j in range(len(plan))]
     per_step_metrics = [{k: float(v[j]) for k, v in host.items()
                          if v.ndim == 1} for j in range(len(plan))]
+    if ex.health is not None:
+        # progress report AFTER the host conversion above forced the
+        # cycle's collectives to complete: the watchdog deadline only
+        # moves when the group demonstrably made it through the exchange
+        ex.health.cycle_done(plan.start_step + len(plan))
     return carry, cycle_losses, per_step_metrics
 
 

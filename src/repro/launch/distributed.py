@@ -34,6 +34,7 @@ which is reduction-order-identical on the CPU backend.
 from __future__ import annotations
 
 import os
+import time
 from dataclasses import dataclass
 from typing import Optional
 
@@ -108,11 +109,42 @@ class DistributedConfig:
                    dispatch=disp)
 
 
-def initialize(cfg: DistributedConfig) -> None:
+# Failure signatures of a transient coordinator connect/bind race: the
+# coordinator process losing the port between free_port() and bind (a
+# just-torn-down group's socket in TIME_WAIT, or a concurrent test group),
+# or clients racing a coordinator that died and is being restarted. Fresh
+# attempts resolve these — TIME_WAIT drains and regrouped coordinators come
+# back — so `initialize` retries them with exponential backoff. Anything
+# not matching fails immediately; a retry must never paper over a real
+# failure. (tests/conftest.py used to carry a retry-once wrapper around
+# whole subprocess groups for the same races; fixed here at the source.)
+CONNECT_RACE_SIGNATURES = (
+    "Address already in use",
+    "ADDRESS_IN_USE",
+    "Failed to bind",
+    "Connection reset by peer",
+    "coordinator service failed to start",
+    "DEADLINE_EXCEEDED",
+    "UNAVAILABLE",
+)
+
+
+def _is_connect_race(exc: BaseException) -> bool:
+    return any(sig in str(exc) for sig in CONNECT_RACE_SIGNATURES)
+
+
+def initialize(cfg: DistributedConfig, *, max_attempts: int = 5,
+               backoff_s: float = 0.5) -> None:
     """Connect this process to the coordinator (idempotent; no-op for a
     single process). Must be called before anything touches JAX devices —
     the backend is configured here (CPU cross-process collectives run on
-    gloo)."""
+    gloo).
+
+    Connect/bind failures matching `CONNECT_RACE_SIGNATURES` are retried
+    up to `max_attempts` times with exponential backoff (0.5 s, 1 s, 2 s,
+    …): the coordinator port race is transient by construction, and a
+    regrouped epoch's workers may connect while the fresh coordinator is
+    still coming up. Non-transient errors raise on the first attempt."""
     global _initialized
     if cfg.num_processes <= 1 or _initialized:
         return
@@ -137,9 +169,26 @@ def initialize(cfg: DistributedConfig) -> None:
     # executor's discipline (one collective-bearing program in flight,
     # enforced by construction — see DistributedConfig.dispatch) is what
     # stands in for the serial-dispatch guarantee.
-    jax.distributed.initialize(coordinator_address=cfg.coordinator,
-                               num_processes=cfg.num_processes,
-                               process_id=cfg.process_id)
+    for attempt in range(max_attempts):
+        try:
+            jax.distributed.initialize(coordinator_address=cfg.coordinator,
+                                       num_processes=cfg.num_processes,
+                                       process_id=cfg.process_id)
+            break
+        except Exception as e:
+            if attempt == max_attempts - 1 or not _is_connect_race(e):
+                raise
+            try:
+                # a half-initialized client/service must be torn down
+                # before the next attempt re-binds
+                jax.distributed.shutdown()
+            except Exception:
+                pass
+            delay = backoff_s * (2 ** attempt)
+            print(f"[distributed] initialize attempt {attempt + 1}/"
+                  f"{max_attempts} hit a transient connect race ({e}); "
+                  f"retrying in {delay:.1f}s")
+            time.sleep(delay)
     _initialized = True
 
 

@@ -152,15 +152,29 @@ def main():
     args = ap.parse_args()
 
     say = print
+    health = None
+    live_cfg = None
     if args.distributed:
         from repro.launch.distributed import (DistributedConfig, initialize,
                                               is_coordinator)
+        from repro.resilience.runtime import HealthConfig, HealthMonitor
         if not args.topology:
             ap.error("--distributed derives its mesh from --topology")
         dist = DistributedConfig.from_env(coordinator=args.coordinator,
                                           num_processes=args.procs,
                                           process_id=args.proc_id,
                                           dispatch=args.dispatch)
+        live_cfg = HealthConfig.from_env()  # None unless supervised
+        if live_cfg is not None:
+            if args.executor != "macro":
+                ap.error("supervised runs (DASO_RUN_DIR set) report "
+                         "progress from the macro executor; drop "
+                         "--executor per_step")
+            # heartbeats start BEFORE the coordinator connect so even a
+            # wedged initialize is watchdog-bounded
+            health = HealthMonitor(live_cfg, proc_id=dist.process_id)
+            health.start()
+            health.phase("init")
         if dist.dispatch == "overlap" and args.overlap == "off":
             # fail BEFORE jax.distributed comes up: async dispatch with the
             # blocking schedule would put two collective-bearing programs
@@ -246,14 +260,24 @@ def main():
                                  max(1, args.steps // 10))
     data_fn = sync_data if args.strategy == "sync" else daso_data
 
+    # a supervised regroup epoch (launcher relaunched us after a real
+    # process death) turns into a fault-plan run: resume from the newest
+    # intact checkpoint, the death replayed as crash event(s) at the
+    # resume step — numerics identical to the simulated oracle
+    regroup = None
+    if live_cfg is not None and live_cfg.regroup_file:
+        from repro.resilience.runtime import load_regroup
+        regroup = load_regroup(live_cfg.regroup_file)
+        if not args.ckpt:
+            ap.error("a regrouped epoch resumes from --ckpt; the "
+                     "supervisor must pass --ckpt DIR --ckpt-every N")
+
     report = None
-    if args.fault_plan:
+    live_meta = None
+    if args.fault_plan or regroup is not None:
         if args.strategy == "sync":
             ap.error("--fault-plan requires a replica-axis strategy "
                      "(daso / local_sgd)")
-        if args.resume:
-            ap.error("--resume is not supported together with "
-                     "--fault-plan (restart the fault run from step 0)")
         if args.executor != "macro":
             ap.error("--fault-plan drives the macro-cycle supervisor; "
                      "--executor per_step is not supported with it")
@@ -263,22 +287,62 @@ def main():
                      "snapshot taken under the old active set (stale "
                      "exchange weights). Run fault plans with the blocking "
                      "schedule (--overlap off).")
-        from repro.checkpoint.io import TrainState, save_train_state
+        from repro.checkpoint.io import (TrainState, load_latest_train_state,
+                                         load_train_state, save_train_state)
         from repro.resilience.faults import FaultPlan
         from repro.resilience.supervisor import run_with_faults
         from repro.train.loop import build_strategy, ckpt_step_dir
         from repro.optim.optimizers import sgd
 
-        plan = FaultPlan.from_json(args.fault_plan)
-        if spec is not None:
-            plan = plan.resolve(spec)  # topology-node events -> replicas
-        plan.validate(R)
+        ts = None
+        if regroup is not None:
+            from repro.resilience.runtime import regroup_fault_events
+            resumed_from, ts = load_latest_train_state(
+                args.ckpt, expect_overlap="off")
+            events = regroup_fault_events(ts.step, ts.membership,
+                                          regroup.dead_replicas,
+                                          rejoin=regroup.rejoin)
+            plan = FaultPlan(tuple(events))
+            if args.fault_plan:
+                # keep any scripted events still ahead of the resume step
+                scripted = FaultPlan.from_json(args.fault_plan)
+                if spec is not None:
+                    scripted = scripted.resolve(spec)
+                plan = FaultPlan(plan.events + tuple(
+                    e for e in scripted.events if e.step >= ts.step))
+            live_meta = {"epoch": regroup.epoch, "crash_step": ts.step,
+                         "dead_replicas": list(regroup.dead_replicas),
+                         "rejoin": regroup.rejoin,
+                         "resumed_from": resumed_from,
+                         "watchdog_s": live_cfg.watchdog_s}
+            say(f"[train] regroup epoch {regroup.epoch}: resumed "
+                f"{resumed_from} at step {ts.step}, replaying "
+                f"{len(plan.events)} event(s) for dead replicas "
+                f"{list(regroup.dead_replicas)}"
+                + (" with elastic rejoin" if regroup.rejoin else ""))
+        else:
+            plan = FaultPlan.from_json(args.fault_plan)
+            if spec is not None:
+                plan = plan.resolve(spec)  # topology-node events -> replicas
+            if args.resume:
+                ts = load_train_state(args.resume, expect_overlap="off",
+                                      fallback=True)
         strategy = build_strategy(loss_fn, loop_cfg,
                                   sgd(momentum=0.9, weight_decay=1e-4))
         placement = None
         if args.distributed:
             from repro.launch.distributed import MeshPlacement
             placement = MeshPlacement(spec)
+
+        start_step, carry, membership, prior_losses = 0, None, None, []
+        if ts is not None:
+            if ts.strategy != args.strategy:
+                ap.error(f"checkpoint was written by strategy "
+                         f"{ts.strategy!r}, run requests {args.strategy!r}")
+            start_step, carry, membership = ts.step, ts.carry, ts.membership
+            prior_losses = list(ts.losses)
+            if ts.controller is not None and strategy.controller is not None:
+                strategy.controller.load_state_dict(ts.controller)
 
         ckpt_cb = None
         if args.ckpt_every:
@@ -295,13 +359,20 @@ def main():
                         membership=(list(strategy.membership)
                                     if strategy.membership is not None
                                     else None),
-                        strategy=args.strategy, losses=list(seg_losses)))
+                        strategy=args.strategy,
+                        losses=prior_losses + list(seg_losses)))
 
+        if health is not None:
+            health.phase("train")
         report = run_with_faults(strategy, params0, daso_data, lr_fn,
                                  args.steps, plan,
                                  ckpt_every=args.ckpt_every,
-                                 ckpt_cb=ckpt_cb, placement=placement)
+                                 ckpt_cb=ckpt_cb, placement=placement,
+                                 start_step=start_step, carry=carry,
+                                 membership=membership, health=health)
         result = report.result
+        if prior_losses:
+            result.losses = prior_losses + result.losses
         say(f"[train] fault plan: {len(plan.events)} events, "
             f"{report.invalidations} cycle-cache invalidations, "
             f"simulated_time={report.simulated_time_s:.2f}s")
@@ -311,8 +382,12 @@ def main():
                 f"handle={ev['handle_s'] * 1e3:.1f}ms "
                 f"first_cycle={ev['first_cycle_s'] * 1e3:.1f}ms")
     else:
+        if health is not None:
+            health.phase("train")
         result = run_training(loss_fn, params0, data_fn, loop_cfg,
-                              lr_fn=lr_fn, log=say)
+                              lr_fn=lr_fn, log=say, health=health)
+    if health is not None:
+        health.phase("finalize")
     if result.executor_stats is not None:
         s = result.executor_stats
         say(f"[train] executor: {s.dispatches} host dispatches for "
@@ -337,9 +412,13 @@ def main():
                 "events": report.applied,
                 "invalidations": report.invalidations,
                 "simulated_time_s": report.simulated_time_s}
+            if live_meta is not None:
+                metrics["resilience"]["live"] = live_meta
         with open(args.metrics_out, "w") as f:
             json.dump(metrics, f)
         print(f"[train] metrics -> {args.metrics_out}")
+    if health is not None:
+        health.close()
 
 
 if __name__ == "__main__":

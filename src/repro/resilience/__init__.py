@@ -1,8 +1,14 @@
 """Resilience subsystem: elastic replica membership, deterministic fault
-injection (replica- or topology-node-addressed), and full-state resume.
-See docs/architecture.md §Resilience and docs/topologies.md §Faults."""
+injection (replica- or topology-node-addressed), full-state resume, and the
+live health/regroup plane for real process death (runtime.py).
+See docs/architecture.md §Resilience / §Live fault tolerance and
+docs/topologies.md §Faults."""
 from repro.resilience.faults import FaultEvent, FaultPlan, KINDS  # noqa: F401
 from repro.resilience.membership import (donor_mean_rows,  # noqa: F401
                                          reseed_carry)
+from repro.resilience.runtime import (EXIT_PEER_LOST,  # noqa: F401
+                                      HealthConfig, HealthMonitor,
+                                      RegroupPlan, load_regroup,
+                                      regroup_fault_events, save_regroup)
 from repro.resilience.supervisor import (ResilienceReport,  # noqa: F401
                                          run_with_faults)

@@ -186,11 +186,19 @@ class FaultPlan:
         return tuple(slow)
 
     # -- validation ----------------------------------------------------------
-    def validate(self, n_replicas: int) -> None:
+    def validate(self, n_replicas: int,
+                 alive0: Optional[List[bool]] = None) -> None:
         """Replay the plan symbolically and reject incoherent scripts:
         out-of-range replicas, crashing a dead replica, rejoining a live
-        one, or leaving zero survivors at any point."""
-        alive = [True] * n_replicas
+        one, or leaving zero survivors at any point. `alive0` overrides
+        the all-alive starting membership — a plan replayed from a resumed
+        checkpoint (live regroup) starts from the membership the snapshot
+        recorded, not from a fresh cluster."""
+        alive = ([bool(a) for a in alive0] if alive0 is not None
+                 else [True] * n_replicas)
+        if len(alive) != n_replicas:
+            raise ValueError(f"alive0 has {len(alive)} entries for "
+                             f"{n_replicas} replicas")
         for e in self.events:
             if e.node is not None:
                 raise ValueError(

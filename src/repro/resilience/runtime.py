@@ -1,0 +1,257 @@
+"""Live fault-tolerance runtime: the health plane of a supervised
+multi-process run.
+
+PR 3 made crash recovery a *simulation* — fault plans replayed in-process,
+membership masks flipped by a supervisor that never loses a real process.
+This module is the piece that turns those semantics into a guarantee on the
+real `jax.distributed` runtime (launch/distributed.py): every worker of a
+supervised group runs a `HealthMonitor`, and `tools/launch_procs.py`'s
+supervisor mode reads what it writes. Three mechanisms:
+
+  * **heartbeats** — a daemon thread writes ``hb_{epoch}_{proc}.json`` into
+    the shared run directory every `hb_interval` seconds: proc id, epoch,
+    the last completed training step, and a phase tag ("init" → "train" →
+    "done"). The launcher uses them to trigger `--kill proc:step` at a
+    precise training step and to time detection/recovery.
+  * **collective watchdog** — the same thread bounds *progress*: the
+    training loop must complete a cycle (or announce a phase change) every
+    `watchdog_s` seconds, else the process writes a status marker and
+    hard-exits with `EXIT_PEER_LOST`. A dead peer leaves survivors blocked
+    inside a gloo collective with no Python control flow; a watchdog
+    *around* each blocking region is the only way out. In practice the JAX
+    coordination service aborts the stuck group earlier (~10 s missed
+    heartbeats); the watchdog is the backstop that bounds detection even
+    when that service is itself wedged. One progress rule covers every
+    blocking region — cycle dispatch, checkpoint gathers, init collectives
+    — because they all sit between progress events.
+  * **regroup protocol** — on a detected death the launcher tears the
+    epoch down and relaunches survivors under a fresh coordinator epoch
+    (new port, `DASO_EPOCH` += 1) with a ``regroup.json`` naming the dead
+    replicas. The new epoch resumes from the newest *intact* TrainState
+    (checkpoint/io.py's crash-safe loaders) and replays the death as a PR-3
+    membership-mask crash event at the resume step — which is exactly why
+    the regrouped run is bit-exact with the simulated fault-plan oracle
+    for the same crash (tests/test_live_faults.py).
+
+Workers keep spanning the FULL topology world after a regroup (fewer
+processes, more local devices each): the mesh, the compiled programs, and
+the masked-ghost numerics are identical to the pre-crash run by the PR-5
+SPMD contract, so nothing about the reduced process count can perturb the
+oracle equivalence.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+# exit code a worker uses when ITS watchdog detects lost progress (a dead
+# peer wedging a collective). Distinct from crash codes so the launcher can
+# tell "I detected a peer loss" from "I am the root failure".
+EXIT_PEER_LOST = 75
+
+ENV_RUN_DIR = "DASO_RUN_DIR"
+ENV_EPOCH = "DASO_EPOCH"
+ENV_WATCHDOG_S = "DASO_WATCHDOG_S"
+ENV_HB_INTERVAL = "DASO_HB_INTERVAL"
+ENV_REGROUP_FILE = "DASO_REGROUP_FILE"
+
+DEFAULT_WATCHDOG_S = 300.0   # must exceed the worst single blocking region
+DEFAULT_HB_INTERVAL = 0.25   # (first-cycle XLA compile included)
+
+
+def heartbeat_path(run_dir: str, epoch: int, proc_id: int) -> str:
+    return os.path.join(run_dir, f"hb_{epoch}_{proc_id}.json")
+
+
+def status_path(run_dir: str, epoch: int, proc_id: int) -> str:
+    return os.path.join(run_dir, f"status_{epoch}_{proc_id}.json")
+
+
+@dataclass(frozen=True)
+class HealthConfig:
+    """Supervision parameters, exported by the launcher's supervisor mode
+    (`tools/launch_procs.py --kill/--supervise`) through the environment.
+    `from_env` returns None in unsupervised runs — the health plane costs
+    nothing unless a supervisor asked for it."""
+    run_dir: str
+    epoch: int = 0
+    watchdog_s: float = DEFAULT_WATCHDOG_S
+    hb_interval: float = DEFAULT_HB_INTERVAL
+    regroup_file: Optional[str] = None
+
+    @classmethod
+    def from_env(cls) -> Optional["HealthConfig"]:
+        run_dir = os.environ.get(ENV_RUN_DIR)
+        if not run_dir:
+            return None
+        return cls(run_dir=run_dir,
+                   epoch=int(os.environ.get(ENV_EPOCH, "0")),
+                   watchdog_s=float(os.environ.get(
+                       ENV_WATCHDOG_S, str(DEFAULT_WATCHDOG_S))),
+                   hb_interval=float(os.environ.get(
+                       ENV_HB_INTERVAL, str(DEFAULT_HB_INTERVAL))),
+                   regroup_file=os.environ.get(ENV_REGROUP_FILE) or None)
+
+
+class HealthMonitor:
+    """Per-worker heartbeat writer + progress watchdog (one daemon thread).
+
+    The training loop reports progress via `phase(name)` and
+    `cycle_done(step)` (the executor calls the latter after every compiled
+    cycle — core/executor.py::dispatch_planned_cycle). Each report pushes
+    the watchdog deadline out by `watchdog_s`; if the deadline passes the
+    thread writes a status marker and `os._exit(EXIT_PEER_LOST)` — an
+    ordinary exception could never unwind a thread that is parked inside a
+    gloo collective."""
+
+    def __init__(self, cfg: HealthConfig, proc_id: int):
+        self.cfg = cfg
+        self.proc_id = proc_id
+        self._lock = threading.Lock()
+        self._phase = "start"
+        self._step = -1
+        self._deadline = time.monotonic() + cfg.watchdog_s
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # -- progress reports (called from the training thread) ---------------
+    def phase(self, name: str) -> None:
+        with self._lock:
+            self._phase = name
+            self._deadline = time.monotonic() + self.cfg.watchdog_s
+        self._write()  # phase flips are rare and the launcher times them
+
+    def cycle_done(self, step: int) -> None:
+        with self._lock:
+            self._step = step
+            self._deadline = time.monotonic() + self.cfg.watchdog_s
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> "HealthMonitor":
+        os.makedirs(self.cfg.run_dir, exist_ok=True)
+        self._write()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="daso-health")
+        self._thread.start()
+        return self
+
+    def close(self) -> None:
+        """Normal shutdown: disarm the watchdog, write a final beat."""
+        self._stop.set()
+        with self._lock:
+            self._phase = "done"
+        self._write()
+        if self._thread is not None:
+            self._thread.join(timeout=2 * self.cfg.hb_interval + 1)
+
+    # -- internals ---------------------------------------------------------
+    def _write(self) -> None:
+        with self._lock:
+            doc = {"proc": self.proc_id, "epoch": self.cfg.epoch,
+                   "phase": self._phase, "step": self._step,
+                   "t": time.time()}
+        path = heartbeat_path(self.cfg.run_dir, self.cfg.epoch,
+                              self.proc_id)
+        tmp = f"{path}.tmp"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(doc, f)
+            os.replace(tmp, path)  # readers never see a torn beat
+        except OSError:
+            pass  # a missed beat is survivable; a crashed writer is not
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.cfg.hb_interval):
+            self._write()
+            with self._lock:
+                expired = time.monotonic() > self._deadline
+                phase, step = self._phase, self._step
+            if expired:
+                try:
+                    with open(status_path(self.cfg.run_dir, self.cfg.epoch,
+                                          self.proc_id), "w") as f:
+                        json.dump({"proc": self.proc_id,
+                                   "reason": "watchdog",
+                                   "phase": phase, "step": step,
+                                   "watchdog_s": self.cfg.watchdog_s,
+                                   "t": time.time()}, f)
+                except OSError:
+                    pass
+                os._exit(EXIT_PEER_LOST)
+
+
+def read_heartbeat(run_dir: str, epoch: int, proc_id: int) -> Optional[dict]:
+    """Launcher-side: latest beat of one worker, None before its first."""
+    try:
+        with open(heartbeat_path(run_dir, epoch, proc_id)) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+# -- regroup protocol ---------------------------------------------------------
+
+@dataclass(frozen=True)
+class RegroupPlan:
+    """What the launcher tells a regrouped epoch: which replicas died
+    (root-cause processes' subtrees — collateral aborts keep their state),
+    and whether the restarted ranks should rejoin (elastic mode). The
+    crash/rejoin *step* is deliberately absent: it is defined as the resume
+    step of the newest intact TrainState, which only the workers can
+    determine (the supervisor cannot know which snapshot survived the
+    crash intact)."""
+    epoch: int
+    dead_replicas: tuple
+    rejoin: bool = False
+
+    def to_json(self) -> str:
+        return json.dumps({"epoch": self.epoch,
+                           "dead_replicas": list(self.dead_replicas),
+                           "rejoin": self.rejoin}, indent=1)
+
+
+def save_regroup(path: str, plan: RegroupPlan) -> None:
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        f.write(plan.to_json())
+    os.replace(tmp, path)
+
+
+def load_regroup(path: str) -> RegroupPlan:
+    with open(path) as f:
+        doc = json.load(f)
+    return RegroupPlan(epoch=int(doc["epoch"]),
+                       dead_replicas=tuple(int(r)
+                                           for r in doc["dead_replicas"]),
+                       rejoin=bool(doc.get("rejoin", False)))
+
+
+def regroup_fault_events(resume_step: int,
+                         membership: Optional[Sequence[float]],
+                         dead_replicas: Sequence[int], *,
+                         rejoin: bool = False) -> List:
+    """Translate a RegroupPlan into PR-3 fault events at the resume step.
+
+    A crash is replayed only for replicas still ACTIVE in the resumed
+    membership — a checkpoint taken after an earlier regroup already has
+    the victim masked out, and re-crashing a dead replica is (rightly)
+    rejected by FaultPlan.validate. With `rejoin`, every dead replica also
+    rejoins at the same step: FaultPlan orders crash before rejoin at equal
+    steps, so the restarted rank is re-seeded from the survivors' mean
+    (resilience/membership.py) exactly as a simulated rejoin would be."""
+    from repro.resilience.faults import FaultEvent
+
+    events: List[FaultEvent] = []
+    for r in dead_replicas:
+        active = membership is None or membership[r] > 0.0
+        if active:
+            events.append(FaultEvent(step=resume_step, kind="crash",
+                                     replica=int(r)))
+        if rejoin:
+            events.append(FaultEvent(step=resume_step, kind="rejoin",
+                                     replica=int(r)))
+    return events

@@ -66,7 +66,10 @@ def run_with_faults(strategy: Strategy, params0, data_fn: Callable,
                     topo=None,
                     ckpt_every: int = 0,
                     ckpt_cb: Optional[Callable] = None,
-                    placement=None) -> ResilienceReport:
+                    placement=None,
+                    start_step: int = 0, carry=None,
+                    membership=None,
+                    health=None) -> ResilienceReport:
     """Run `n_steps` of compiled training while replaying `plan`.
 
     `strategy` must be a replica-axis strategy (daso / hier_daso /
@@ -84,7 +87,16 @@ def run_with_faults(strategy: Strategy, params0, data_fn: Callable,
     membership flips and cache invalidations (the plan is deterministic),
     a lost process's replicas are exactly a membership-mask event on its
     subtree, and rejoin re-seeding runs on the gathered host carry so the
-    re-placed rows are identical on every process."""
+    re-placed rows are identical on every process.
+
+    Resume surface (mirrors executor.run_compiled_training, used by the
+    live regroup path): `start_step` + restored `carry` + the checkpoint's
+    `membership` mask continue an interrupted fault run — the strategy's
+    controller must already be restored by the caller. Events scheduled
+    before `start_step` are rejected: anything already in the past is
+    either reflected in the checkpoint's membership or meaningless to
+    replay. `health` (resilience.runtime.HealthMonitor) arms the progress
+    watchdog around every dispatched cycle."""
     cfg = strategy.cfg
     if cfg is None:
         raise ValueError("run_with_faults needs a replica-axis strategy "
@@ -94,23 +106,37 @@ def run_with_faults(strategy: Strategy, params0, data_fn: Callable,
         topo = getattr(strategy, "topo", None)
     if topo is not None:
         plan = plan.resolve(topo)
-    plan.validate(n_replicas)
+    mask = (list(membership) if membership is not None
+            else [1.0] * n_replicas)
+    past = [e for e in plan.events if e.step < start_step]
+    if past:
+        raise ValueError(
+            f"fault plan has {len(past)} event(s) before resume step "
+            f"{start_step} (first: {past[0]}); a resumed run replays only "
+            "future events — the past is already in the checkpoint")
+    plan.validate(n_replicas, alive0=[m > 0.0 for m in mask])
 
     ex, placement = resolve_executor(strategy, executor, placement)
-    carry = strategy.init_carry(params0)
+    if health is not None and ex.health is None:
+        ex.health = health
+    if membership is not None and any(m <= 0.0 for m in mask):
+        # the checkpoint was taken under a reduced active set: rebuild the
+        # step variants with its mask baked in before anything compiles
+        strategy.set_membership(mask)
+    carry = strategy.init_carry(params0) if carry is None else carry
     if placement is not None:
         carry = placement.put_carry(carry)
-    mask = list(plan.membership_at(-1, n_replicas))  # all active
     slowdowns = [1.0] * n_replicas
     dcn_scale = 1.0
 
     report = ResilienceReport(result=None)
-    report.membership_timeline.append((0, tuple(mask)))
+    report.membership_timeline.append((start_step, tuple(mask)))
     losses: List[float] = []
     metrics_log: List[Dict[str, float]] = []
     sim_time = 0.0
     pending_first_cycle: List[Dict] = []  # events awaiting recompile timing
-    next_ckpt = ckpt_every if ckpt_every else None
+    next_ckpt = ((start_step // ckpt_every + 1) * ckpt_every
+                 if ckpt_every else None)
 
     def apply_event(ev, step):
         nonlocal carry, dcn_scale
@@ -159,7 +185,7 @@ def run_with_faults(strategy: Strategy, params0, data_fn: Callable,
         rec["handle_s"] = time.perf_counter() - t0
         report.applied.append(rec)
 
-    step = 0
+    step = start_step
     while step < n_steps:
         for ev in plan.events_at(step):
             apply_event(ev, step)

@@ -159,18 +159,28 @@ def ckpt_step_dir(ckpt_dir: str, step: int) -> str:
 def run_training(loss_fn: Callable, params0, data_fn: Callable,
                  cfg: TrainLoopConfig, *, optimizer: Optional[Optimizer] = None,
                  lr_fn: Optional[Callable] = None,
-                 log: Optional[Callable] = print) -> SimResult:
+                 log: Optional[Callable] = print,
+                 health=None) -> SimResult:
     """data_fn(step) -> batch. For daso/local_sgd strategies the batch must
     carry the leading replica axis; for sync it is flat.
 
     On resume (`cfg.resume_from`), the returned SimResult's loss trace is
     the *full* run (checkpointed prefix + resumed segment), so downstream
-    reporting (final_loss, metrics JSON) is seamless across restarts."""
+    reporting (final_loss, metrics JSON) is seamless across restarts.
+
+    `health` (resilience.runtime.HealthMonitor) threads the live-fault
+    heartbeat/watchdog into the macro executor — supervised multi-process
+    runs only (launch/train.py wires it from the launcher environment)."""
     optimizer = optimizer or sgd(momentum=0.9, weight_decay=1e-4)
     lr_fn = lr_fn or constant_lr(cfg.lr)
     if cfg.executor not in ("macro", "per_step"):
         raise ValueError(f"unknown executor {cfg.executor!r}; "
                          "expected 'macro' or 'per_step'")
+    if health is not None and cfg.executor != "macro":
+        raise ValueError("live supervision (health monitor) reports "
+                         "progress from the macro executor's cycle "
+                         "dispatch; run supervised jobs with "
+                         "--executor macro")
     strategy = build_strategy(loss_fn, cfg, optimizer)
 
     placement = None
@@ -191,7 +201,11 @@ def run_training(loss_fn: Callable, params0, data_fn: Callable,
         # overlap="off") checkpoint has no pending arena to resume
         # mid-overlap from, and vice versa
         expect = cfg.overlap if cfg.strategy != "sync" else "off"
-        ts = load_train_state(cfg.resume_from, expect_overlap=expect)
+        # fallback=True: a crash mid-save (the live-fault SIGKILL case)
+        # leaves the newest snapshot torn; resume from the newest intact
+        # sibling instead of dying on it
+        ts = load_train_state(cfg.resume_from, expect_overlap=expect,
+                              fallback=True)
         if ts.strategy != cfg.strategy:
             raise ValueError(f"checkpoint was written by strategy "
                              f"{ts.strategy!r}, run requests "
@@ -238,7 +252,7 @@ def run_training(loss_fn: Callable, params0, data_fn: Callable,
     else:
         executor = MacroCycleExecutor(
             strategy, max_cycle_len=cfg.max_cycle_len, placement=placement,
-            serial_exchange=cfg.overlap_serial_exchange)
+            serial_exchange=cfg.overlap_serial_exchange, health=health)
         result = run_compiled_training(
             strategy, params0, data_fn, lr_fn, cfg.n_steps,
             executor=executor, start_step=start_step, carry=carry,

@@ -74,42 +74,19 @@ def subprocess_env(devices: int = 1, extra: dict = None) -> dict:
     return env
 
 
-# Failure signatures of a coordinator/port race: two test processes (or a
-# just-torn-down process group) grabbing the same localhost port between
-# free_port() and bind. Transient by construction — a fresh attempt picks a
-# fresh port — so the harness retries ONCE. Anything else fails immediately
-# and loudly; a retry must never paper over a real failure.
-PORT_RACE_SIGNATURES = (
-    "Address already in use",
-    "ADDRESS_IN_USE",
-    "Failed to bind",
-    "Connection reset by peer",
-    "coordinator service failed to start",
-)
-
-
-def looks_like_port_race(output: str) -> bool:
-    return any(sig in output for sig in PORT_RACE_SIGNATURES)
-
-
 def run_subprocess(script: str, devices: int = 8, timeout: int = 900,
                    extra_env: dict = None) -> str:
     """Run an inline python script in a fresh process on `devices` forced
-    CPU devices; assert success and return stdout. A failure matching a
-    known coordinator-port-race signature is retried once (fresh process,
-    fresh port draw); every other failure surfaces immediately."""
+    CPU devices; assert success and return stdout. Coordinator port races
+    are handled at the source — `launch.distributed.initialize` retries
+    transient connect/bind failures with backoff — so any failure here is
+    real and surfaces immediately."""
     import subprocess
     import sys
     import textwrap
 
-    for attempt in (0, 1):
-        r = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
-                           capture_output=True, text=True, timeout=timeout,
-                           env=subprocess_env(devices, extra_env))
-        if r.returncode == 0:
-            return r.stdout
-        if attempt == 0 and looks_like_port_race(r.stdout + r.stderr):
-            continue  # transient: one clean re-launch on a new port
-        break
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=subprocess_env(devices, extra_env))
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
     return r.stdout

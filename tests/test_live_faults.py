@@ -1,0 +1,533 @@
+"""Live fault tolerance: real process death on the multi-process runtime.
+
+The acceptance contract of the health plane (resilience/runtime.py) and the
+launcher's supervisor mode (tools/launch_procs.py --kill): a process group
+with one rank SIGKILLed mid-run detects the death within the watchdog
+budget, regroups under a fresh coordinator epoch, resumes from the newest
+intact checkpoint, and finishes with final params BIT-EXACT with the PR-3
+simulated fault-plan oracle for the same crash. Plus the crash-safe
+checkpoint layer (torn/truncated snapshots detected and skipped), the
+regroup-event translation, the worker watchdog, and the resume surface of
+the resilience supervisor.
+"""
+import copy
+import glob
+import json
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import numpy as np
+import pytest
+from conftest import make_mlp_problem, subprocess_env
+
+from repro.checkpoint.io import (CheckpointCorruptError, TrainState,
+                                 list_train_state_dirs,
+                                 load_latest_train_state, load_train_state,
+                                 save_train_state)
+from repro.core.daso import DasoConfig
+from repro.core.executor import make_strategy
+from repro.core.schedule import DasoController
+from repro.optim.optimizers import sgd
+from repro.optim.schedules import constant_lr
+from repro.resilience.faults import FaultEvent, FaultPlan
+from repro.resilience.runtime import (EXIT_PEER_LOST, HealthConfig,
+                                      HealthMonitor, RegroupPlan,
+                                      load_regroup, read_heartbeat,
+                                      regroup_fault_events, save_regroup)
+from repro.resilience.supervisor import run_with_faults
+from repro.train.loop import ckpt_step_dir
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+LAUNCHER = os.path.join(REPO, "tools", "launch_procs.py")
+TOPOLOGY = "chip:1 x host:2 x pod:2"  # world 4: R=4 replicas, 3 levels
+WATCHDOG_S = 120.0
+
+BASE_ARGS = ["--arch", "llama3.2-1b", "--tiny", "--topology", TOPOLOGY,
+             "--per-node-batch", "2", "--seq-len", "16", "--b-max", "4",
+             "--seed", "0"]
+
+
+def _launcher_env():
+    env = subprocess_env(devices=1)
+    env.pop("XLA_FLAGS")  # the harness sets the per-child device count
+    return env
+
+
+def supervised(tmp_path, procs, train_args, *, kill=None, elastic=False,
+               timeout=900):
+    """Run one supervised group through the real launcher; return
+    (exit_code, report dict, combined output)."""
+    report = str(tmp_path / "report.json")
+    cmd = [sys.executable, LAUNCHER, "--procs", str(procs),
+           "--timeout", str(timeout), "--watchdog", str(WATCHDOG_S),
+           "--run-dir", str(tmp_path / "live"), "--report", report,
+           "--supervise"]
+    if kill is not None:
+        cmd += ["--kill", kill]
+    if elastic:
+        cmd += ["--elastic-rejoin"]
+    cmd += ["--"] + BASE_ARGS + train_args
+    r = subprocess.run(cmd, capture_output=True, text=True,
+                       timeout=timeout + 60, env=_launcher_env(), cwd=REPO)
+    rep = {}
+    if os.path.exists(report):
+        with open(report) as f:
+            rep = json.load(f)
+    return r.returncode, rep, r.stdout + r.stderr
+
+
+def launch_plain(procs, train_args, timeout=600):
+    cmd = [sys.executable, LAUNCHER, "--procs", str(procs),
+           "--timeout", str(timeout), "--"] + BASE_ARGS + train_args
+    r = subprocess.run(cmd, capture_output=True, text=True,
+                       timeout=timeout + 60, env=_launcher_env(), cwd=REPO)
+    assert r.returncode == 0, (f"oracle launch failed ({r.returncode}):\n"
+                               f"{r.stdout}\n{r.stderr}")
+
+
+def assert_same_params(dir_a, dir_b):
+    files_a = sorted(glob.glob(os.path.join(str(dir_a), "*.npz")))
+    files_b = sorted(glob.glob(os.path.join(str(dir_b), "*.npz")))
+    assert files_a and len(files_a) == len(files_b)
+    for fa, fb in zip(files_a, files_b):
+        a, b = np.load(fa), np.load(fb)
+        assert sorted(a.files) == sorted(b.files)
+        for k in a.files:
+            if k == "__save_id__":
+                continue  # unique per save by design
+            np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+# ------------------------------------------------ live kill e2e ----------
+
+def test_live_kill_regroup_matches_simulated_oracle(tmp_path):
+    """Flagship acceptance: 2 processes, rank 1 SIGKILLed at step 6. The
+    supervisor must detect within the watchdog budget, regroup onto 1
+    process spanning the full world, resume from the newest intact
+    checkpoint, and produce final params bit-exact with the simulated
+    fault-plan oracle crashing the same replicas at the same step."""
+    steps = 14
+    live_ckpt = tmp_path / "ckpt_live"
+    live_metrics = tmp_path / "metrics_live.json"
+    code, rep, out = supervised(
+        tmp_path, 2,
+        ["--steps", str(steps), "--ckpt", str(live_ckpt),
+         "--ckpt-every", "1", "--metrics-out", str(live_metrics)],
+        kill="1:6")
+    assert code == 0, f"supervised run failed ({code}):\n{out}"
+    assert rep["ok"] and rep["kill"]["proc"] == 1
+    # detection: bounded by the watchdog budget (in practice the launcher
+    # sees the SIGKILL exit within one poll interval)
+    assert rep["timings"]["detect_s"] is not None
+    assert 0.0 <= rep["timings"]["detect_s"] < WATCHDOG_S
+    assert rep["timings"]["regroup_s"] > 0.0
+    assert rep["timings"]["resume_s"] > 0.0
+    # epoch 0 failed, epoch 1 regrouped onto fewer procs over the full world
+    assert [e["outcome"] for e in rep["epochs"]] == ["failed", "ok"]
+    assert rep["epochs"][0]["procs"] == 2
+    assert rep["epochs"][1]["procs"] == 1
+    # proc 1 of 2 owns the second pod subtree -> replicas 2, 3
+    assert rep["dead_replicas"] == [2, 3]
+
+    with open(live_metrics) as f:
+        live = json.load(f)
+    meta = live["resilience"]["live"]
+    assert meta["epoch"] == 1 and meta["dead_replicas"] == [2, 3]
+    crash_step = meta["crash_step"]
+    assert 0 < crash_step <= 6 + 4  # within a cycle of the kill step
+
+    # simulated oracle: same run, no supervisor, the death scripted as
+    # crash events at the crash-equivalent step
+    plan = tmp_path / "oracle_plan.json"
+    plan.write_text(json.dumps({"events": [
+        {"step": crash_step, "kind": "crash", "replica": r}
+        for r in meta["dead_replicas"]]}))
+    oracle_ckpt = tmp_path / "ckpt_oracle"
+    oracle_metrics = tmp_path / "metrics_oracle.json"
+    launch_plain(1, ["--steps", str(steps), "--fault-plan", str(plan),
+                     "--ckpt", str(oracle_ckpt), "--ckpt-every", "1",
+                     "--metrics-out", str(oracle_metrics)])
+    assert_same_params(live_ckpt, oracle_ckpt)
+    with open(oracle_metrics) as f:
+        oracle = json.load(f)
+    # the stitched loss trace (pre-crash checkpoint + resumed epoch) is
+    # bit-identical to the oracle's uninterrupted one
+    assert live["losses"] == oracle["losses"]
+    assert live["final_loss"] == oracle["final_loss"]
+
+
+@pytest.mark.slow
+def test_live_kill_four_procs_matches_oracle(tmp_path):
+    """4-process variant of the acceptance criterion: rank 2 SIGKILLed at
+    step 6. World 4 cannot regroup onto 3 procs (4 % 3), so the survivors
+    re-span the full world on 2 — and the result still matches the
+    simulated oracle bit-exactly. @slow: 4 concurrent jax processes
+    contend hard on CI cores; the live-fault-smoke lane and the nightly
+    run it."""
+    steps = 12
+    live_ckpt = tmp_path / "ck"
+    metrics = tmp_path / "m.json"
+    code, rep, out = supervised(
+        tmp_path, 4,
+        ["--steps", str(steps), "--ckpt", str(live_ckpt),
+         "--ckpt-every", "1", "--metrics-out", str(metrics)],
+        kill="2:6")
+    assert code == 0, f"supervised run failed ({code}):\n{out}"
+    assert [e["procs"] for e in rep["epochs"]] == [4, 2]
+    assert rep["dead_replicas"] == [2]  # proc 2 of 4 owns replica 2 only
+    assert 0.0 <= rep["timings"]["detect_s"] < WATCHDOG_S
+
+    with open(metrics) as f:
+        meta = json.load(f)["resilience"]["live"]
+    plan = tmp_path / "oracle_plan.json"
+    plan.write_text(json.dumps({"events": [
+        {"step": meta["crash_step"], "kind": "crash", "replica": 2}]}))
+    oracle_ckpt = tmp_path / "ck_oracle"
+    launch_plain(1, ["--steps", str(steps), "--fault-plan", str(plan),
+                     "--ckpt", str(oracle_ckpt), "--ckpt-every", "1"])
+    assert_same_params(live_ckpt, oracle_ckpt)
+
+
+@pytest.mark.slow
+def test_live_elastic_rejoin(tmp_path):
+    """Elastic mode: the regrouped epoch restarts the ORIGINAL process
+    count; the reborn rank's replicas rejoin at the resume step and are
+    re-seeded from the survivors' mean."""
+    metrics = tmp_path / "m.json"
+    code, rep, out = supervised(
+        tmp_path, 2,
+        ["--steps", "14", "--ckpt", str(tmp_path / "ck"),
+         "--ckpt-every", "1", "--metrics-out", str(metrics)],
+        kill="1:6", elastic=True)
+    assert code == 0, f"elastic supervised run failed ({code}):\n{out}"
+    assert [e["procs"] for e in rep["epochs"]] == [2, 2]
+    with open(metrics) as f:
+        live = json.load(f)
+    meta = live["resilience"]["live"]
+    assert meta["rejoin"] is True
+    kinds = [e["kind"] for e in live["resilience"]["events"]]
+    assert kinds == ["crash", "crash", "rejoin", "rejoin"]
+    assert np.all(np.isfinite(live["losses"]))
+
+
+# --------------------------------- crash-safe checkpoint property --------
+
+def _tiny_state(step, membership=None):
+    carry = ({"w": np.arange(12.0, dtype=np.float32).reshape(3, 4) + step},
+             {"m": np.full((3, 4), 0.5, np.float32)})
+    return TrainState(step=step, carry=carry,
+                      controller={"b": 4, "w": 1},
+                      membership=membership, strategy="daso",
+                      losses=[0.1 * i for i in range(step)])
+
+
+def _corrupt(path, how):
+    """Simulate a crash mid-save / torn pair in snapshot dir `path`."""
+    npz = os.path.join(path, "arrays.npz")
+    man = os.path.join(path, "manifest.json")
+    if how == "truncate_arrays":
+        with open(npz, "r+b") as f:
+            f.truncate(os.path.getsize(npz) // 2)
+    elif how == "truncate_manifest":
+        with open(man, "r+b") as f:
+            f.truncate(max(1, os.path.getsize(man) // 2))
+    elif how == "missing_manifest":
+        os.remove(man)
+    elif how == "missing_arrays":
+        os.remove(npz)
+    elif how == "torn_pair":
+        # arrays renamed in, then crash, then a later save's manifest:
+        # both files individually valid but from different saves
+        with open(man) as f:
+            doc = json.load(f)
+        doc["save_id"] = "9999-0-deadbeef"
+        with open(man, "w") as f:
+            json.dump(doc, f)
+    else:
+        raise AssertionError(how)
+
+
+@pytest.mark.parametrize("how", ["truncate_arrays", "truncate_manifest",
+                                 "missing_manifest", "missing_arrays",
+                                 "torn_pair"])
+def test_corrupt_checkpoint_detected_and_fallback(tmp_path, how):
+    """A snapshot torn by a crash mid-write must be DETECTED (never
+    silently half-loaded) and the loader must fall back to the newest
+    intact sibling."""
+    ckpt = str(tmp_path / "ck")
+    for step in (4, 8):
+        save_train_state(ckpt_step_dir(ckpt, step), _tiny_state(step))
+    newest = ckpt_step_dir(ckpt, 8)
+    _corrupt(newest, how)
+
+    with pytest.raises(CheckpointCorruptError):
+        load_train_state(newest)
+    # explicit-path fallback scans the step_XXXXXXXX siblings
+    st = load_train_state(newest, fallback=True)
+    assert st.step == 4
+    np.testing.assert_array_equal(np.asarray(st.carry[0]["w"]),
+                                  np.arange(12.0).reshape(3, 4) + 4)
+    # the latest-snapshot scan skips the corrupt one
+    path, st2 = load_latest_train_state(ckpt)
+    assert st2.step == 4 and path == ckpt_step_dir(ckpt, 4)
+
+
+def test_load_latest_with_no_intact_snapshot(tmp_path):
+    ckpt = str(tmp_path / "ck")
+    save_train_state(ckpt_step_dir(ckpt, 4), _tiny_state(4))
+    _corrupt(ckpt_step_dir(ckpt, 4), "truncate_arrays")
+    with pytest.raises(CheckpointCorruptError):
+        load_latest_train_state(ckpt)
+    with pytest.raises(CheckpointCorruptError):
+        load_latest_train_state(str(tmp_path / "nonexistent"))
+
+
+def test_list_train_state_dirs_orders_newest_first(tmp_path):
+    ckpt = str(tmp_path / "ck")
+    for step in (3, 12, 7):
+        save_train_state(ckpt_step_dir(ckpt, step), _tiny_state(step))
+    (tmp_path / "ck" / "not_a_step").mkdir()
+    dirs = list_train_state_dirs(ckpt)
+    assert dirs == [ckpt_step_dir(ckpt, s) for s in (12, 7, 3)]
+
+
+def test_atomic_save_keeps_old_snapshot_on_rewrite(tmp_path):
+    """Re-saving into the same dir replaces atomically: a reader always
+    sees a consistent (arrays, manifest) pair."""
+    d = str(tmp_path / "snap")
+    save_train_state(d, _tiny_state(4))
+    save_train_state(d, _tiny_state(9))
+    st = load_train_state(d)
+    assert st.step == 9
+    assert not [p for p in os.listdir(d) if ".tmp." in p]  # no debris
+
+
+# --------------------------------------- regroup-event translation -------
+
+def test_regroup_fault_events_translation():
+    # fresh membership: every dead replica crashes at the resume step
+    evs = regroup_fault_events(10, None, [2, 3])
+    assert [(e.step, e.kind, e.replica) for e in evs] == \
+        [(10, "crash", 2), (10, "crash", 3)]
+    # a checkpoint written AFTER the deaths already has them masked:
+    # replay must be idempotent (re-crashing a dead replica is invalid)
+    evs = regroup_fault_events(10, [1.0, 1.0, 0.0, 1.0], [2, 3])
+    assert [(e.kind, e.replica) for e in evs] == [("crash", 3)]
+    FaultPlan(tuple(evs)).validate(4, alive0=[True, True, False, True])
+    # elastic: dead replicas rejoin at the same step; FaultPlan orders
+    # crash before rejoin so the reseed happens from the survivors
+    evs = regroup_fault_events(10, [1.0, 1.0, 0.0, 1.0], [2, 3],
+                               rejoin=True)
+    plan = FaultPlan(tuple(evs))
+    assert [(e.kind, e.replica) for e in plan.events] == \
+        [("crash", 3), ("rejoin", 2), ("rejoin", 3)]
+    plan.validate(4, alive0=[True, True, False, True])
+
+
+def test_regroup_plan_roundtrip(tmp_path):
+    p = str(tmp_path / "regroup.json")
+    save_regroup(p, RegroupPlan(epoch=2, dead_replicas=(1, 3),
+                                rejoin=True))
+    got = load_regroup(p)
+    assert got == RegroupPlan(epoch=2, dead_replicas=(1, 3), rejoin=True)
+
+
+def test_viable_procs_respects_replica_subtrees():
+    sys.path.insert(0, os.path.join(REPO, "tools"))
+    import launch_procs as lp
+
+    from repro.topo import TopologySpec
+    spec = TopologySpec.load(TOPOLOGY)  # world 4
+    assert lp.viable_procs(spec, 4) == 4
+    assert lp.viable_procs(spec, 3) == 2  # 4 % 3 != 0 -> drop to 2
+    assert lp.viable_procs(spec, 1) == 1
+
+
+# ------------------------------------------------- health plane ----------
+
+def test_heartbeat_roundtrip(tmp_path):
+    cfg = HealthConfig(run_dir=str(tmp_path), epoch=3, watchdog_s=60.0,
+                       hb_interval=0.05)
+    mon = HealthMonitor(cfg, proc_id=1).start()
+    try:
+        mon.phase("train")
+        mon.cycle_done(7)
+        deadline = time.time() + 5.0
+        hb = None
+        while time.time() < deadline:
+            hb = read_heartbeat(str(tmp_path), 3, 1)
+            if hb and hb["step"] == 7:
+                break
+            time.sleep(0.05)
+        assert hb is not None
+        assert hb["proc"] == 1 and hb["epoch"] == 3
+        assert hb["phase"] == "train" and hb["step"] == 7
+    finally:
+        mon.close()
+    assert read_heartbeat(str(tmp_path), 3, 1)["phase"] == "done"
+    # other (epoch, proc) slots are untouched
+    assert read_heartbeat(str(tmp_path), 3, 0) is None
+    assert read_heartbeat(str(tmp_path), 2, 1) is None
+
+
+def test_watchdog_hard_exits_wedged_process(tmp_path):
+    """A worker that stops making progress (parked in a dead collective)
+    must hard-exit with EXIT_PEER_LOST within the watchdog budget — an
+    exception could never unwind a thread stuck in gloo."""
+    script = f"""
+import time
+from repro.resilience.runtime import HealthConfig, HealthMonitor
+cfg = HealthConfig(run_dir={str(tmp_path)!r}, watchdog_s=0.6,
+                   hb_interval=0.1)
+mon = HealthMonitor(cfg, proc_id=0).start()
+mon.phase("train")
+time.sleep(30)   # never reports progress again -> watchdog must fire
+"""
+    t0 = time.monotonic()
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=25, env=subprocess_env(1))
+    assert r.returncode == EXIT_PEER_LOST, (r.returncode, r.stderr)
+    assert time.monotonic() - t0 < 20.0
+    status = json.load(open(tmp_path / "status_0_0.json"))
+    assert status["reason"] == "watchdog" and status["phase"] == "train"
+
+
+def test_health_config_from_env(monkeypatch):
+    monkeypatch.delenv("DASO_RUN_DIR", raising=False)
+    assert HealthConfig.from_env() is None
+    monkeypatch.setenv("DASO_RUN_DIR", "/tmp/run")
+    monkeypatch.setenv("DASO_EPOCH", "2")
+    monkeypatch.setenv("DASO_WATCHDOG_S", "45")
+    cfg = HealthConfig.from_env()
+    assert cfg.run_dir == "/tmp/run" and cfg.epoch == 2
+    assert cfg.watchdog_s == 45.0 and cfg.regroup_file is None
+
+
+# ------------------------------------- coordinator connect retry ---------
+
+def test_initialize_retries_transient_connect_race(monkeypatch):
+    """The PR-5 conftest retry-once wrapper is gone; the port race is now
+    absorbed at the source with backoff inside launch.distributed
+    .initialize."""
+    from repro.launch import distributed as dmod
+
+    calls, sleeps = [], []
+    monkeypatch.setattr(dmod, "_initialized", False)
+
+    def fake_init(**kw):
+        calls.append(kw)
+        if len(calls) < 3:
+            raise RuntimeError("Failed to bind the port: "
+                               "Address already in use")
+
+    monkeypatch.setattr(jax.distributed, "initialize", fake_init)
+    monkeypatch.setattr(jax.distributed, "shutdown", lambda: None)
+    monkeypatch.setattr(dmod.time, "sleep", sleeps.append)
+    cfg = dmod.DistributedConfig(coordinator="127.0.0.1:1", num_processes=2,
+                                 process_id=0)
+    dmod.initialize(cfg, backoff_s=0.5)
+    assert len(calls) == 3
+    assert sleeps == [0.5, 1.0]  # exponential backoff
+    assert dmod._initialized
+
+    # non-transient errors surface on the FIRST attempt
+    monkeypatch.setattr(dmod, "_initialized", False)
+    calls.clear()
+
+    def fake_boom(**kw):
+        calls.append(kw)
+        raise RuntimeError("invalid coordinator address")
+
+    monkeypatch.setattr(jax.distributed, "initialize", fake_boom)
+    with pytest.raises(RuntimeError, match="invalid coordinator"):
+        dmod.initialize(cfg, backoff_s=0.5)
+    assert len(calls) == 1
+
+
+# ------------------------------- supervisor resume surface (in-proc) -----
+
+def _daso_strategy(loss_fn, n_steps, R=4):
+    cfg = DasoConfig(n_replicas=R, global_world=4 * R, b_max=4,
+                     warmup_steps=n_steps // 10,
+                     cooldown_steps=n_steps // 10, total_steps=n_steps)
+    return make_strategy("daso", loss_fn, sgd(momentum=0.9), cfg,
+                         controller=DasoController(cfg, loss_window=10))
+
+
+def test_run_with_faults_resume_is_bit_exact():
+    """The regroup path in miniature: a fault run snapshotted every 4
+    steps, then resumed from a pre-crash AND a post-crash snapshot, must
+    reproduce the uninterrupted fault run's final params bit-exactly.
+    This is the in-process half of the live-kill oracle equivalence."""
+    key = jax.random.PRNGKey(11)
+    params0, loss_fn, daso_data, _ = make_mlp_problem(key, R=4)
+    n_steps = 24
+    plan = FaultPlan.from_dicts([{"step": 10, "kind": "crash",
+                                  "replica": 3}])
+
+    snaps = {}
+    strat = _daso_strategy(loss_fn, n_steps)
+
+    def snap_cb(step, carry, seg_losses):
+        snaps[step] = {
+            "carry": jax.tree.map(np.array, carry),
+            "controller": copy.deepcopy(strat.controller.state_dict()),
+            "membership": (list(strat.membership)
+                           if strat.membership is not None else None)}
+
+    full = run_with_faults(strat, params0, daso_data, constant_lr(0.1),
+                           n_steps, plan, ckpt_every=4, ckpt_cb=snap_cb)
+    pre = [s for s in snaps if s <= 10]
+    post = [s for s in snaps if s > 10]
+    assert pre and post  # both sides of the crash are covered
+
+    for step0 in (max(pre), min(post)):
+        s = snaps[step0]
+        strat2 = _daso_strategy(loss_fn, n_steps)
+        strat2.controller.load_state_dict(s["controller"])
+        # exactly what launch/train.py replays on resume: the scripted
+        # events still ahead, from the snapshot's own membership
+        remaining = FaultPlan(tuple(e for e in plan.events
+                                    if e.step >= step0))
+        rep = run_with_faults(strat2, params0, daso_data, constant_lr(0.1),
+                              n_steps, remaining, start_step=step0,
+                              carry=s["carry"], membership=s["membership"])
+        for a, b in zip(jax.tree.leaves(full.result.params),
+                        jax.tree.leaves(rep.result.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"resume@{step0}")
+
+
+def test_run_with_faults_rejects_events_in_the_past():
+    key = jax.random.PRNGKey(12)
+    params0, loss_fn, daso_data, _ = make_mlp_problem(key, R=4)
+    strat = _daso_strategy(loss_fn, 20)
+    plan = FaultPlan.from_dicts([{"step": 5, "kind": "crash",
+                                  "replica": 1}])
+    carry = strat.init_carry(params0)
+    with pytest.raises(ValueError, match="before resume step"):
+        run_with_faults(strat, params0, daso_data, constant_lr(0.1), 20,
+                        plan, start_step=8, carry=carry)
+
+
+def test_regroup_events_replay_against_masked_checkpoint():
+    """Second-failure idempotence: a checkpoint already carrying a masked
+    membership only replays the NEW death."""
+    key = jax.random.PRNGKey(13)
+    params0, loss_fn, daso_data, _ = make_mlp_problem(key, R=4)
+    strat = _daso_strategy(loss_fn, 24)
+    membership = [1.0, 1.0, 0.0, 1.0]  # replica 2 died in a prior epoch
+    events = regroup_fault_events(8, membership, [2, 3])
+    plan = FaultPlan(tuple(events))
+    carry = strat.init_carry(params0)
+    rep = run_with_faults(strat, params0, daso_data, constant_lr(0.1), 24,
+                          plan, start_step=8, carry=carry,
+                          membership=membership)
+    assert [(e["step"], e["kind"], e["replica"]) for e in rep.applied] == \
+        [(8, "crash", 3)]
+    assert rep.membership_timeline[0] == (8, (1.0, 1.0, 0.0, 1.0))
+    assert rep.membership_timeline[-1] == (8, (1.0, 1.0, 0.0, 0.0))
+    assert np.all(np.isfinite(rep.result.losses))

@@ -58,6 +58,8 @@ def assert_same_params(dir_a: str, dir_b: str) -> None:
         a, b = np.load(fa), np.load(fb)
         assert sorted(a.files) == sorted(b.files)
         for k in a.files:
+            if k == "__save_id__":
+                continue  # unique per save by design
             np.testing.assert_array_equal(a[k], b[k], err_msg=k)
 
 

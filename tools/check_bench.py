@@ -70,6 +70,15 @@ POLICIES = {
         "loss_delta_k2": ("bounds", (-0.5, 0.5)),
         "recovery_s_mean": ("bounds_strict", (0.0, None)),
         "degraded_exchange_cost_ratio": ("baseline", ("higher", 0.25)),
+        # live fault plane (real SIGKILL + supervised regroup): recovered
+        # params must equal the simulated oracle EXACTLY, detection must
+        # land inside the watchdog budget, and each recovery phase must
+        # have measurable (nonzero) cost
+        "live_oracle_param_delta": ("exact", 0.0),
+        "live_detect_within_budget": ("exact", 1.0),
+        "live_detect_s": ("bounds_strict", (0.0, None)),
+        "live_regroup_s": ("bounds_strict", (0.0, None)),
+        "live_resume_s": ("bounds_strict", (0.0, None)),
     },
     "BENCH_overlap.json": {
         # at least one macro-cycle actually ran the overlap dispatch path

@@ -29,15 +29,33 @@ or set with ``--local-devices``.
 
 Exit status: 0 iff every child exited 0. The first failure terminates the
 rest of the group (a hung coordinator peer would otherwise block forever).
+
+Supervisor mode (``--supervise``, implied by ``--kill``) adds the live
+fault-tolerance plane (src/repro/resilience/runtime.py): children write
+heartbeats into a shared run directory, ``--kill proc:step`` SIGKILLs one
+child once its heartbeat reaches the given training step, and a detected
+death triggers a *regroup* instead of a group failure — survivors are torn
+down and relaunched under a fresh coordinator epoch (new port), resuming
+from the newest intact checkpoint with the death replayed as a PR-3
+membership-mask crash event. ``--elastic-rejoin`` restarts the full process
+count instead, the reborn ranks rejoining via the reseed path. ``--report``
+writes detection/regroup/resume timings as JSON.
+
+  # kill proc 2 at step 6; survivors regroup and finish
+  python tools/launch_procs.py --procs 4 --kill 2:6 --report /tmp/r.json -- \
+      --arch llama3.2-1b --tiny --topology "chip:1 x host:2 x pod:2" \
+      --steps 16 --ckpt /tmp/ck --ckpt-every 1 --metrics-out /tmp/m.json
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import signal
 import socket
 import subprocess
 import sys
+import tempfile
 import threading
 import time
 
@@ -51,33 +69,69 @@ def free_port() -> int:
         return s.getsockname()[1]
 
 
+def child_flag_value(child_args, flag: str):
+    """Value of `--flag SPEC` / `--flag=SPEC` in the child args, or None.
+    Last occurrence wins, matching argparse."""
+    val = None
+    for i, a in enumerate(child_args):
+        if a == flag:
+            if i + 1 >= len(child_args):
+                raise SystemExit(f"{flag} given without a value")
+            val = child_args[i + 1]
+        elif a.startswith(flag + "="):
+            val = a.split("=", 1)[1]
+    return val
+
+
+def topology_spec(child_args):
+    """The parsed TopologySpec of the child run, or None."""
+    spec_arg = child_flag_value(child_args, "--topology")
+    if spec_arg is None:
+        return None
+    sys.path.insert(0, SRC)
+    from repro.topo import TopologySpec
+    return TopologySpec.load(spec_arg)
+
+
 def derive_local_devices(child_args, procs: int) -> int:
     """world/procs from a --topology spec in the child args, else 1.
     Handles both the two-token form (``--topology SPEC``) and the
     ``--topology=SPEC`` spelling."""
-    spec_arg = None
-    for i, a in enumerate(child_args):
-        if a == "--topology":
-            if i + 1 >= len(child_args):
-                raise SystemExit("--topology given without a spec")
-            spec_arg = child_args[i + 1]
-        elif a.startswith("--topology="):
-            spec_arg = a.split("=", 1)[1]
-    if spec_arg is None:
+    spec = topology_spec(child_args)
+    if spec is None:
         return 1
+    if spec.world % procs:
+        raise SystemExit(f"topology world {spec.world} does not divide "
+                         f"over {procs} processes")
+    return spec.world // procs
+
+
+def viable_procs(spec, max_procs: int) -> int:
+    """Largest process count <= max_procs the topology can regroup onto:
+    world must divide evenly AND every process must own a whole replica
+    subtree (launch.mesh.validate_process_topology). Survivor counts that
+    straddle a replica are skipped — the regrouped epoch re-spans the FULL
+    world with fewer, fatter processes."""
     sys.path.insert(0, SRC)
-    from repro.topo import TopologySpec
-    world = TopologySpec.load(spec_arg).world
-    if world % procs:
-        raise SystemExit(f"topology world {world} does not divide over "
-                         f"{procs} processes")
-    return world // procs
+    from repro.launch.mesh import validate_process_topology
+    for k in range(max_procs, 0, -1):
+        if spec.world % k:
+            continue
+        try:
+            validate_process_topology(spec, k)
+            return k
+        except ValueError:
+            continue
+    raise SystemExit(f"topology {spec.to_str()} has no viable process "
+                     f"count <= {max_procs}")
 
 
-def child_env(procs: int, pid: int, port: int, devices: int) -> dict:
+def child_env(procs: int, pid: int, port: int, devices: int,
+              extra: dict | None = None) -> dict:
     """Explicit child environment: the JAX-relevant variables are always
     set (never silently inherited; `forced_cpu_env` is the one shared
-    definition), plus the DASO_* process-group identity."""
+    definition), plus the DASO_* process-group identity. `extra` carries
+    the supervision variables (DASO_RUN_DIR & co) in supervisor mode."""
     sys.path.insert(0, SRC)
     from repro.launch.distributed import forced_cpu_env
 
@@ -86,6 +140,8 @@ def child_env(procs: int, pid: int, port: int, devices: int) -> dict:
     env["DASO_NUM_PROCS"] = str(procs)
     env["DASO_PROC_ID"] = str(pid)
     env["PYTHONUNBUFFERED"] = "1"
+    if extra:
+        env.update(extra)
     return env
 
 
@@ -159,6 +215,271 @@ def launch(procs: int, child_args, *, module: str = "repro.launch.train",
     return max(abs(c) for c in codes)
 
 
+# -- supervisor mode: live fault injection + regroup --------------------------
+
+def parse_kill(s: str):
+    """--kill "proc:step" -> (proc, step)."""
+    try:
+        proc, step = s.split(":")
+        return int(proc), int(step)
+    except ValueError:
+        raise SystemExit(f"--kill expects PROC:STEP (e.g. 2:6), got {s!r}")
+
+
+def _spawn_group(procs, child_args, module, devices, port, extra_env,
+                 sink):
+    cmd = [sys.executable, "-m", module] + list(child_args)
+    children, pumps = [], []
+    for pid in range(procs):
+        p = subprocess.Popen(
+            cmd, env=child_env(procs, pid, port, devices, extra_env(pid)),
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
+        t = threading.Thread(target=_pump, args=(p, f"p{pid}", sink),
+                             daemon=True)
+        t.start()
+        children.append(p)
+        pumps.append(t)
+    return children, pumps
+
+
+def _teardown(children, *, grace: float = 10.0) -> None:
+    for p in children:
+        if p.poll() is None:
+            p.send_signal(signal.SIGTERM)
+    deadline = time.monotonic() + grace
+    for p in children:
+        try:
+            p.wait(timeout=max(0.1, deadline - time.monotonic()))
+        except subprocess.TimeoutExpired:
+            p.kill()
+            p.wait()
+
+
+def _monitor_epoch(children, *, run_dir, epoch, deadline, kill,
+                   watchdog_s, exit_peer_lost, read_hb):
+    """Poll one epoch's group to completion or first failure.
+
+    Returns a dict: outcome "ok" | "failed" | "timeout", per-child codes,
+    the root failure (proc id + mechanism + time), the kill record if the
+    injection fired, and t_train (first heartbeat with phase=="train" —
+    what recovery timing is measured to)."""
+    n = len(children)
+    codes = [None] * n
+    out = {"outcome": None, "codes": codes, "root": None,
+           "t_kill": None, "t_train": None}
+    kill_pending = kill is not None
+    # a worker stalled this long past the watchdog has a wedged watchdog
+    # too (the in-process exit at watchdog_s is the first line of defense)
+    stall_s = watchdog_s + 60.0
+    spawn_t = time.monotonic()
+    last_beat = [spawn_t] * n       # when we last saw a FRESH beat
+    seen_t = [None] * n             # the beat's own wall-clock stamp
+    last_step = [-1] * n
+
+    def fail(root, mechanism, code=None):
+        out["outcome"] = "failed"
+        out["root"] = {"proc": root, "mechanism": mechanism, "code": code,
+                       "t": time.monotonic(), "step": last_step[root]}
+
+    while True:
+        for i, p in enumerate(children):
+            if codes[i] is None:
+                codes[i] = p.poll()
+        for i in range(n):
+            hb = read_hb(run_dir, epoch, i)
+            if hb is not None:
+                if hb.get("t") != seen_t[i]:  # a beat we haven't seen yet
+                    seen_t[i] = hb.get("t")
+                    last_beat[i] = time.monotonic()
+                last_step[i] = int(hb.get("step", -1))
+                if out["t_train"] is None and hb.get("phase") == "train":
+                    out["t_train"] = time.monotonic()
+        if kill_pending and codes[kill[0]] is None \
+                and last_step[kill[0]] >= kill[1]:
+            children[kill[0]].send_signal(signal.SIGKILL)
+            out["t_kill"] = time.monotonic()
+            kill_pending = False
+        bad = [i for i, c in enumerate(codes) if c not in (None, 0)]
+        if bad:
+            root = bad[0]
+            if codes[root] == exit_peer_lost and len(children) > 1:
+                # that child *detected* a peer loss (its watchdog fired);
+                # the root cause is whoever stopped making progress first
+                others = [i for i in range(n) if i != root]
+                root = min(others, key=lambda i: last_beat[i])
+                fail(root, "watchdog", codes[bad[0]])
+            else:
+                fail(root, "exit", codes[bad[0]])
+            return out
+        alive = [i for i, c in enumerate(codes) if c is None]
+        if not alive:
+            out["outcome"] = "ok"
+            return out
+        now = time.monotonic()
+        for i in alive:
+            if now - last_beat[i] > stall_s:
+                children[i].kill()
+                fail(i, "stall")
+                return out
+        if now > deadline:
+            out["outcome"] = "timeout"
+            return out
+        time.sleep(0.05)
+
+
+def supervise(procs: int, child_args, *,
+              module: str = "repro.launch.train",
+              timeout: float = 1800.0, quiet: bool = False,
+              kill: tuple | None = None,
+              watchdog_s: float | None = None,
+              hb_interval: float = 0.25,
+              max_regroups: int = 2,
+              elastic: bool = False,
+              run_dir: str | None = None,
+              report_path: str | None = None) -> int:
+    """Run the group under live-fault supervision: heartbeat-triggered
+    SIGKILL injection (`kill=(proc, step)`), bounded failure detection,
+    and regroup-restart of the survivors under fresh coordinator epochs
+    (resuming from the newest intact checkpoint, the death replayed as a
+    membership-mask crash event — src/repro/resilience/runtime.py has the
+    full protocol). Returns 0 iff the final epoch completed cleanly."""
+    sys.path.insert(0, SRC)
+    from repro.launch.mesh import process_replica_slice
+    from repro.resilience import runtime as rt
+
+    child_args = list(child_args)
+    if module == "repro.launch.train" and "--distributed" not in child_args:
+        child_args.append("--distributed")
+    spec = topology_spec(child_args)
+    if spec is None:
+        raise SystemExit("supervisor mode needs --topology in the child "
+                         "args (replica ownership of a dead process is "
+                         "derived from the topology)")
+    if child_flag_value(child_args, "--ckpt") is None or \
+            child_flag_value(child_args, "--ckpt-every") is None:
+        raise SystemExit("supervisor mode needs --ckpt DIR --ckpt-every N "
+                         "in the child args: a regrouped epoch resumes "
+                         "from the newest intact checkpoint")
+    if child_flag_value(child_args, "--overlap") not in (None, "off"):
+        raise SystemExit("supervisor mode needs --overlap off: recovery "
+                         "replays membership-mask fault events, which the "
+                         "overlap schedule rejects")
+    watchdog_s = (watchdog_s if watchdog_s is not None
+                  else rt.DEFAULT_WATCHDOG_S)
+    run_dir = run_dir or tempfile.mkdtemp(prefix="daso-live-")
+    os.makedirs(run_dir, exist_ok=True)
+    sink = open(os.devnull, "w") if quiet else sys.stderr
+    deadline = time.monotonic() + timeout
+
+    report = {"ok": False, "exit_code": 1, "procs": procs,
+              "watchdog_s": watchdog_s, "run_dir": run_dir,
+              "elastic": elastic, "kill": None, "epochs": [],
+              "dead_replicas": [], "timings": {}}
+    if kill is not None:
+        report["kill"] = {"proc": kill[0], "step": kill[1]}
+
+    def finish(code: int) -> int:
+        report["exit_code"] = code
+        report["ok"] = code == 0
+        if report_path:
+            with open(report_path, "w") as f:
+                json.dump(report, f, indent=1)
+        if quiet:
+            sink.close()
+        return code
+
+    epoch, regroups = 0, 0
+    dead: list[int] = []
+    n = procs
+    t0 = time.monotonic()
+    t_detect = t_kill = None
+    children = []
+    try:
+        while True:
+            devices = spec.world // n
+            port = free_port()
+            extra = {rt.ENV_RUN_DIR: run_dir,
+                     rt.ENV_EPOCH: str(epoch),
+                     rt.ENV_WATCHDOG_S: str(watchdog_s),
+                     rt.ENV_HB_INTERVAL: str(hb_interval)}
+            if epoch > 0:
+                rg_path = os.path.join(run_dir, f"regroup_{epoch}.json")
+                rt.save_regroup(rg_path, rt.RegroupPlan(
+                    epoch=epoch, dead_replicas=tuple(dead),
+                    rejoin=elastic))
+                extra[rt.ENV_REGROUP_FILE] = rg_path
+            t_spawn = time.monotonic()
+            children, pumps = _spawn_group(
+                n, child_args, module, devices, port, lambda pid: extra,
+                sink)
+            mon = _monitor_epoch(
+                children, run_dir=run_dir, epoch=epoch, deadline=deadline,
+                kill=kill if epoch == 0 else None, watchdog_s=watchdog_s,
+                exit_peer_lost=rt.EXIT_PEER_LOST, read_hb=rt.read_heartbeat)
+            _teardown(children)
+            for t in pumps:
+                t.join(timeout=5)
+            codes = [p.returncode for p in children]
+            rec = {"epoch": epoch, "procs": n, "codes": codes,
+                   "outcome": mon["outcome"]}
+            if mon["t_kill"] is not None:
+                t_kill = mon["t_kill"]
+                report["kill"]["t_after_start_s"] = t_kill - t0
+            if epoch > 0:
+                rec["regroup_s"] = t_spawn - t_detect
+                if mon["t_train"] is not None:
+                    rec["resume_s"] = mon["t_train"] - t_spawn
+            report["epochs"].append(rec)
+
+            if mon["outcome"] == "ok":
+                if epoch > 0:
+                    report["timings"] = {
+                        "detect_s": (t_detect - t_kill
+                                     if t_kill is not None else None),
+                        "regroup_s": report["epochs"][-1].get("regroup_s"),
+                        "resume_s": report["epochs"][-1].get("resume_s"),
+                        "total_s": time.monotonic() - t0}
+                return finish(0)
+            if mon["outcome"] == "timeout":
+                print(f"[launch_procs] supervised run timed out after "
+                      f"{timeout:.0f}s (epoch {epoch})", file=sys.stderr)
+                return finish(124)
+            root = mon["root"]
+            t_detect = root["t"]
+            rec["detect"] = {"proc": root["proc"],
+                             "mechanism": root["mechanism"],
+                             "code": root["code"],
+                             "detect_s": (t_detect - t_kill
+                                          if t_kill is not None else None)}
+            lost = list(process_replica_slice(spec, n, root["proc"]))
+            print(f"[launch_procs] epoch {epoch}: process {root['proc']} "
+                  f"lost ({root['mechanism']}, code={root['code']}) -> "
+                  f"replicas {lost} dead"
+                  + (f", detected {rec['detect']['detect_s']:.2f}s after "
+                     f"kill" if rec["detect"]["detect_s"] is not None
+                     else ""), file=sys.stderr)
+            if regroups >= max_regroups:
+                print(f"[launch_procs] giving up after {regroups} "
+                      f"regroups", file=sys.stderr)
+                return finish(max(abs(c or 1) for c in codes))
+            # elastic epochs rejoin their dead at the resume step, so each
+            # failure stands alone; plain regroups accumulate the dead set
+            # (the worker drops crashes already reflected in the resumed
+            # checkpoint's membership, so replay stays idempotent)
+            dead = sorted(set(lost) if elastic else set(dead) | set(lost))
+            report["dead_replicas"] = dead
+            n = procs if elastic else viable_procs(spec, n - 1)
+            regroups += 1
+            epoch += 1
+            print(f"[launch_procs] regroup {regroups}: epoch {epoch} with "
+                  f"{n} proc(s) over the full world "
+                  f"({spec.world // n} devices each)"
+                  + (", elastic rejoin" if elastic else ""),
+                  file=sys.stderr)
+    finally:
+        _teardown(children, grace=2.0)  # no child outlives the supervisor
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(
         description="spawn N local jax.distributed processes "
@@ -176,15 +497,51 @@ def main() -> None:
                     help="seconds before the whole group is killed")
     ap.add_argument("--quiet", action="store_true",
                     help="drop child output (exit status still propagates)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run under the live fault-tolerance supervisor: "
+                         "heartbeats, watchdog-bounded detection, and "
+                         "regroup-restart of survivors on a process death "
+                         "(implied by --kill)")
+    ap.add_argument("--kill", default=None, metavar="PROC:STEP",
+                    help="SIGKILL child PROC once its heartbeat reaches "
+                         "training step STEP (fault injection; implies "
+                         "--supervise)")
+    ap.add_argument("--watchdog", type=float, default=None,
+                    help="per-worker progress watchdog seconds (default "
+                         "from resilience.runtime; must exceed the worst "
+                         "single compile+cycle)")
+    ap.add_argument("--max-regroups", type=int, default=2,
+                    help="give up after this many regroup-restarts")
+    ap.add_argument("--elastic-rejoin", action="store_true",
+                    help="regroup with the ORIGINAL process count — the "
+                         "restarted ranks rejoin and are re-seeded from "
+                         "the survivors' mean state")
+    ap.add_argument("--run-dir", default=None,
+                    help="shared heartbeat/regroup directory (default: a "
+                         "fresh temp dir)")
+    ap.add_argument("--report", default=None, metavar="JSON",
+                    help="write supervision report (detect/regroup/resume "
+                         "timings, per-epoch outcomes) to this path")
     ap.add_argument("child_args", nargs=argparse.REMAINDER,
                     help="-- then the target module's arguments")
     args = ap.parse_args()
     rest = args.child_args
     if rest and rest[0] == "--":
         rest = rest[1:]
-    code = launch(args.procs, rest, module=args.module,
-                  local_devices=args.local_devices, port=args.port,
-                  timeout=args.timeout, quiet=args.quiet)
+    if args.supervise or args.kill is not None:
+        code = supervise(args.procs, rest, module=args.module,
+                         timeout=args.timeout, quiet=args.quiet,
+                         kill=(parse_kill(args.kill)
+                               if args.kill else None),
+                         watchdog_s=args.watchdog,
+                         max_regroups=args.max_regroups,
+                         elastic=args.elastic_rejoin,
+                         run_dir=args.run_dir,
+                         report_path=args.report)
+    else:
+        code = launch(args.procs, rest, module=args.module,
+                      local_devices=args.local_devices, port=args.port,
+                      timeout=args.timeout, quiet=args.quiet)
     sys.exit(code)
 
 
