@@ -19,7 +19,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig6,fig7,fig8,fig9,micro,exchange,"
-                         "resilience,topology,overlap,roofline")
+                         "resilience,topology,overlap,obs,roofline")
     ap.add_argument("--quick", action="store_true",
                     help="shorter convergence runs")
     args = ap.parse_args()
@@ -28,7 +28,7 @@ def main() -> None:
     def want(tag):
         return only is None or tag in only
 
-    from benchmarks import (figures, microbench, overlap, resilience,
+    from benchmarks import (figures, microbench, obs, overlap, resilience,
                             roofline, topology)
 
     print("name,us_per_call,derived")
@@ -50,6 +50,8 @@ def main() -> None:
         topology.emit_rows(emit, quick=args.quick)
     if want("overlap"):
         overlap.emit_rows(emit, quick=args.quick)
+    if want("obs"):
+        obs.emit_rows(emit, quick=args.quick)
     if want("roofline"):
         roofline.emit_rows(emit)
 

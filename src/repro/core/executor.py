@@ -50,6 +50,7 @@ from repro.core.daso import (DasoConfig, _cross_replica_loss,
                              replicate_params, sync_train_step)
 from repro.core.schedule import (DasoController, Mode, is_ov_mode, join_mode,
                                  split_mode, split_ov)
+from repro.obs.trace import NULL_TRACER
 from repro.optim.optimizers import Optimizer
 
 # A cycle shape is the static fingerprint of a macro-cycle: one
@@ -482,6 +483,13 @@ class ExecutorStats:
     # exchange time when forced serial (serial_exchange=True): the
     # blocking-cost baseline the hidden fraction is measured against
     overlap_exchange_blocking_s: float = 0.0
+    # the stale Eq.(1) merge after both legs completed, and the whole
+    # overlap dispatch wall time. Every leg is bounded by
+    # jax.block_until_ready, so compute + visible/blocking + merge == wall
+    # exactly (tests/test_overlap.py asserts it) — the legs are device
+    # completion times, not async dispatch returns
+    overlap_merge_s: float = 0.0
+    overlap_wall_s: float = 0.0
 
     def dispatches_per_step(self) -> float:
         total = self.steps + self.fallback_steps
@@ -513,7 +521,7 @@ class MacroCycleExecutor:
     def __init__(self, strategy: Strategy, *, max_cycle_len: int = 32,
                  donate: bool = True, tail_fallback: bool = True,
                  placement=None, serial_exchange: bool = False,
-                 health=None):
+                 health=None, tracer=None):
         self.strategy = strategy
         self.max_cycle_len = max_cycle_len
         self.donate = donate
@@ -531,6 +539,9 @@ class MacroCycleExecutor:
         # equivalent — numerics identical, overlap_exchange_blocking_s
         # measured. benchmarks/overlap.py uses this as the baseline leg.
         self.serial_exchange = serial_exchange
+        # obs.trace span/counter sink; NULL_TRACER keeps every call site
+        # branch-free when tracing is off
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.stats = ExecutorStats()
         self._programs: Dict[CycleShape, Callable] = {}
         self._per_step: Dict[Tuple[str, int], Callable] = {}
@@ -547,6 +558,12 @@ class MacroCycleExecutor:
         if shape not in self._programs:
             self._programs[shape] = self._build_program(shape)
             self.stats.compiles += 1
+            # instant, not a span: jit is lazy, the XLA compile itself
+            # lands inside the first cycle span of this shape (which is
+            # why cycle spans carry a fresh_compile flag)
+            self.tracer.instant("compile", cat="executor",
+                                shape_len=len(shape),
+                                modes=[m for m, _ in shape])
         return self._programs[shape]
 
     def invalidate(self) -> int:
@@ -562,6 +579,7 @@ class MacroCycleExecutor:
         self._per_step.clear()
         self._ov_fns.clear()
         self.stats.invalidations += 1
+        self.tracer.instant("invalidate", cat="executor", dropped=n)
         return n
 
     def _build_program(self, shape: CycleShape) -> Callable:
@@ -655,27 +673,46 @@ class MacroCycleExecutor:
         exchange = self._ov_exchange()
         merge = self._ov_merge(ov.staleness, ov.extra_staleness)
         program = self.program_for(ov.compute_shape)
+        # every leg ends on a jax.block_until_ready and the boundary
+        # timestamps are shared between consecutive legs, so the three
+        # stats legs partition the dispatch wall time EXACTLY (device
+        # completion, never async dispatch returns) — the invariant
+        # tests/test_overlap.py asserts
+        t0 = time.perf_counter()
         if self.serial_exchange:
-            t0 = time.perf_counter()
-            inflight = exchange(pending)
-            jax.block_until_ready(inflight)
-            self.stats.overlap_exchange_blocking_s += time.perf_counter() - t0
-            t1 = time.perf_counter()
-            (params, opt_state), m = program((params, opt_state),
-                                             batches, lrs)
-            jax.block_until_ready(params)
-            self.stats.overlap_compute_s += time.perf_counter() - t1
+            with self.tracer.span("ov_exchange_blocking", cat="executor"):
+                inflight = exchange(pending)
+                jax.block_until_ready(inflight)
+                t1 = time.perf_counter()
+                self.stats.overlap_exchange_blocking_s += t1 - t0
+            with self.tracer.span("ov_compute", cat="executor",
+                                  steps=len(ov.compute_shape)):
+                (params, opt_state), m = program((params, opt_state),
+                                                 batches, lrs)
+                jax.block_until_ready(params)
+                t2 = time.perf_counter()
+                self.stats.overlap_compute_s += t2 - t1
         else:
-            t0 = time.perf_counter()
-            inflight = exchange(pending)          # in flight, not awaited
-            (params, opt_state), m = program((params, opt_state),
-                                             batches, lrs)
+            with self.tracer.span("ov_compute", cat="executor",
+                                  steps=len(ov.compute_shape)):
+                inflight = exchange(pending)      # in flight, not awaited
+                (params, opt_state), m = program((params, opt_state),
+                                                 batches, lrs)
+                jax.block_until_ready(params)
+                t1 = time.perf_counter()
+                self.stats.overlap_compute_s += t1 - t0
+            with self.tracer.span("ov_exchange_visible", cat="executor"):
+                jax.block_until_ready(inflight)
+                t2 = time.perf_counter()
+                self.stats.overlap_exchange_visible_s += t2 - t1
+        with self.tracer.span("ov_merge", cat="executor",
+                              staleness=ov.staleness,
+                              extra=ov.extra_staleness):
+            params, loss = merge(params, inflight, m["loss_per_replica"])
             jax.block_until_ready(params)
-            t1 = time.perf_counter()
-            self.stats.overlap_compute_s += t1 - t0
-            jax.block_until_ready(inflight)
-            self.stats.overlap_exchange_visible_s += time.perf_counter() - t1
-        params, loss = merge(params, inflight, m["loss_per_replica"])
+            t3 = time.perf_counter()
+            self.stats.overlap_merge_s += t3 - t2
+        self.stats.overlap_wall_s += t3 - t0
         metrics = dict(m)
         metrics["loss"] = loss
         # pending <- merged params (by reference — donation is off under
@@ -717,29 +754,64 @@ def resolve_executor(strategy: Strategy,
     return ex, ex.placement
 
 
+def shape_sync_counts(shape: CycleShape) -> Dict[str, int]:
+    """Per-level sync tally of ONE cycle shape — the plan-side counterpart
+    of `DasoController.level_sync_counts` (which tallies the whole
+    history). Cycle trace spans carry this so tools/trace_report.py can
+    regress per-level sync costs out of cycle durations."""
+    counts: Dict[str, int] = {"_outer": 0}
+    for (m, _) in shape:
+        if m.startswith(OVERLAP_COMPUTE_PREFIX):
+            m = m[len(OVERLAP_COMPUTE_PREFIX):]
+        outer, inner = split_mode(m)
+        if split_ov(outer)[0] in (Mode.SEND, Mode.SEND_RECEIVE,
+                                  Mode.BLOCKING, Mode.HARD_AVG,
+                                  Mode.OV_SYNC):
+            counts["_outer"] += 1
+        for name in inner:
+            counts[name] = counts.get(name, 0) + 1
+    return counts
+
+
 def dispatch_planned_cycle(ex: MacroCycleExecutor, carry, plan: CyclePlan,
                            data_fn: Callable, lr_fn: Callable,
                            n_steps: int):
     """Stage one planned cycle's batches/lrs, execute it, and convert the
     stacked device metrics to host floats. Returns (carry, cycle_losses,
     per_step_metrics). Shared by `run_compiled_training` and the resilience
-    supervisor so the two dispatch loops cannot silently drift."""
-    steps = range(plan.start_step, plan.start_step + len(plan))
-    per_step = [data_fn(t) for t in steps]
-    lr_list = [lr_fn(t) for t in steps]
-    if ex.placement is not None:
-        batches, lrs = ex.placement.stage_cycle(per_step, lr_list)
-    else:
-        batches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_step)
-        lrs = jnp.asarray(lr_list, jnp.float32)
-    carry, metrics = ex.run_cycle(
-        carry, plan, batches, lrs,
-        is_tail=plan.start_step + len(plan) >= n_steps)
-    # per-replica diagnostics may be sharded across processes in a
-    # distributed run; only host-fetchable metrics (scalars are always
-    # replicated) feed the loss trace
-    host = {k: np.asarray(v) for k, v in metrics.items()
-            if flatbuf.host_fetchable(v)}
+    supervisor so the two dispatch loops cannot silently drift.
+
+    The whole staging -> dispatch -> host-fetch sequence is one "cycle"
+    trace span: the np.asarray conversion below forces device completion,
+    so the span duration is the cycle's true wall cost, not its async
+    dispatch cost. The span's args carry the per-level sync counts and a
+    fresh_compile flag (first execution of a shape pays its XLA
+    compilation inside this span) — everything the drift-table fit needs."""
+    compiles0, fallback0 = ex.stats.compiles, ex.stats.fallback_steps
+    with ex.tracer.span("cycle", cat="executor",
+                        start_step=plan.start_step, steps=len(plan),
+                        syncs=shape_sync_counts(plan.shape)) as sp:
+        steps = range(plan.start_step, plan.start_step + len(plan))
+        per_step = [data_fn(t) for t in steps]
+        lr_list = [lr_fn(t) for t in steps]
+        if ex.placement is not None:
+            batches, lrs = ex.placement.stage_cycle(per_step, lr_list)
+        else:
+            batches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_step)
+            lrs = jnp.asarray(lr_list, jnp.float32)
+        carry, metrics = ex.run_cycle(
+            carry, plan, batches, lrs,
+            is_tail=plan.start_step + len(plan) >= n_steps)
+        # per-replica diagnostics may be sharded across processes in a
+        # distributed run; only host-fetchable metrics (scalars are always
+        # replicated) feed the loss trace
+        host = {k: np.asarray(v) for k, v in metrics.items()
+                if flatbuf.host_fetchable(v)}
+        if ex.tracer.enabled:
+            # span args serialize at __exit__, so outcome flags can land
+            # after the fact
+            sp.args["fresh_compile"] = ex.stats.compiles > compiles0
+            sp.args["fallback"] = ex.stats.fallback_steps > fallback0
     cycle_losses = [float(host["loss"][j]) for j in range(len(plan))]
     per_step_metrics = [{k: float(v[j]) for k, v in host.items()
                          if v.ndim == 1} for j in range(len(plan))]
@@ -811,7 +883,9 @@ def run_compiled_training(strategy: Strategy, params0, data_fn: Callable,
                 divs.extend([d] * len(plan))
         step += len(plan)
         if next_ckpt is not None and ckpt_cb is not None and step >= next_ckpt:
-            ckpt_cb(step, carry, losses)
+            with ex.tracer.span("checkpoint_save", cat="checkpoint",
+                                step=step):
+                ckpt_cb(step, carry, losses)
             next_ckpt = (step // ckpt_every + 1) * ckpt_every
     params = (placement.finalize_params(strategy, carry)
               if placement is not None

@@ -106,6 +106,17 @@ class DasoController:
     events: List[Tuple[int, str, float]] = field(init=False,
                                                  default_factory=list)
 
+    # obs.trace sink for decision events (plateau B/W changes, membership,
+    # DCN scale) — attached by train/loop.py when --trace-out is set.
+    # Deliberately a plain class attribute, NOT a dataclass field: it must
+    # never enter _STATE_FIELDS / state_dict (a checkpoint round-trips
+    # through JSON) and a controller without one stays silent.
+    tracer = None
+
+    def _trace(self, name: str, **args) -> None:
+        if self.tracer is not None:
+            self.tracer.instant(name, cat="schedule", **args)
+
     def __post_init__(self):
         self._b = max(1, self.cfg.b_max)
         self._w = max(1, self._b // 4)
@@ -267,12 +278,19 @@ class DasoController:
         self._since_improve += 1
         if self._since_improve >= self.cfg.plateau_patience:
             self._since_improve = 0
+            b0, w0 = self._b, self._w
             if self._b == 1 and self._w == 1:
                 self._b = max(1, self.cfg.b_max)          # paper: reset
                 self._w = max(1, self._b // 4)
+                reason = "plateau_reset"
             else:
                 self._b = max(1, self._b // 2)             # paper: halve
                 self._w = max(1, self._w // 2)
+                reason = "plateau_halve"
+            self._trace("bw_change", reason=reason, b_from=b0, b_to=self._b,
+                        w_from=w0, w_to=self._w, window_mean=mean,
+                        best=self._best,
+                        patience=self.cfg.plateau_patience)
 
     # -- resilience hooks --------------------------------------------------
     def notify_membership_change(self, step: int, n_active: int) -> None:
@@ -287,6 +305,8 @@ class DasoController:
         self._since_improve = 0
         self._best = float("inf")
         self.events.append((step, "membership", float(n_active)))
+        self._trace("membership_change", reason="plateau_stats_flushed",
+                    step=step, n_active=n_active)
 
     def notify_dcn_scale(self, scale: float, *, step: int = -1) -> None:
         """The cross-pod (DCN) network degraded to `scale`× its nominal
@@ -299,13 +319,18 @@ class DasoController:
             raise ValueError(f"dcn scale must be positive, got {scale}")
         self._dcn_scale = float(scale)
         b_max = max(1, self.cfg.b_max)
+        b0 = self._b
         if scale < 1.0:
             stretched = int(math.ceil(b_max / scale))
             self._b = max(self._b, min(4 * b_max, stretched))
+            reason = "dcn_degraded"
         else:
             self._b = min(self._b, b_max)
+            reason = "dcn_recovered"
         self._w = max(1, self._b // 4)
         self.events.append((step, "dcn_scale", float(scale)))
+        self._trace("dcn_scale", reason=reason, step=step, scale=scale,
+                    b_from=b0, b_to=self._b)
 
     # -- checkpoint state --------------------------------------------------
     _STATE_FIELDS = ("_b", "_w", "_last_send", "_inflight_since",

@@ -135,6 +135,13 @@ def main():
                          "resilience supervisor; daso-family strategies "
                          "only")
     ap.add_argument("--metrics-out", default=None)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a JSONL run trace (obs/trace.py): spans "
+                         "from the executor/scheduler/resilience layers + "
+                         "comm meters. Multi-process runs write one "
+                         "PATH.e{epoch}p{proc}.jsonl stream per process, "
+                         "merged into PATH by tools/launch_procs.py; "
+                         "export/inspect with tools/trace_report.py")
     ap.add_argument("--distributed", action="store_true",
                     help="run over jax.distributed: the topology mesh "
                          "spans every coordinator-connected process "
@@ -154,6 +161,7 @@ def main():
     say = print
     health = None
     live_cfg = None
+    tracer = None
     if args.distributed:
         from repro.launch.distributed import (DistributedConfig, initialize,
                                               is_coordinator)
@@ -165,6 +173,15 @@ def main():
                                           process_id=args.proc_id,
                                           dispatch=args.dispatch)
         live_cfg = HealthConfig.from_env()  # None unless supervised
+        if args.trace_out:
+            # one stream per (epoch, proc), next to the heartbeat files'
+            # run dir semantics; the launcher merges them into the single
+            # run trace at --trace-out after the group exits
+            from repro.obs.trace import Tracer, stream_path
+            tracer = Tracer(stream_path(
+                args.trace_out, dist.process_id,
+                live_cfg.epoch if live_cfg is not None else 0),
+                proc_id=dist.process_id)
         if live_cfg is not None:
             if args.executor != "macro":
                 ap.error("supervised runs (DASO_RUN_DIR set) report "
@@ -172,7 +189,8 @@ def main():
                          "--executor per_step")
             # heartbeats start BEFORE the coordinator connect so even a
             # wedged initialize is watchdog-bounded
-            health = HealthMonitor(live_cfg, proc_id=dist.process_id)
+            health = HealthMonitor(live_cfg, proc_id=dist.process_id,
+                                   tracer=tracer)
             health.start()
             health.phase("init")
         if dist.dispatch == "overlap" and args.overlap == "off":
@@ -188,6 +206,12 @@ def main():
                      "--dispatch serial (default) for blocking schedules.")
         initialize(dist)  # before anything touches devices
         if not is_coordinator():
+            if args.metrics_out:
+                # raw print: `say` is about to be silenced, and the user
+                # deserves to know why the file never appears on this rank
+                print(f"[train][proc {dist.process_id}] --metrics-out is "
+                      f"written by the coordinator only; this rank drops "
+                      f"{args.metrics_out}")
             # one process speaks for the group; files are proc-0-only too
             say = lambda *a, **k: None
             args.metrics_out = None
@@ -259,6 +283,25 @@ def main():
                                  R * args.local_world,
                                  max(1, args.steps // 10))
     data_fn = sync_data if args.strategy == "sync" else daso_data
+
+    if args.trace_out and tracer is None:  # single-process run
+        from repro.obs.trace import Tracer, stream_path
+        tracer = Tracer(stream_path(args.trace_out, 0), proc_id=0)
+    if tracer is not None:
+        # everything tools/trace_report.py needs to price the model side
+        # of its drift table rides in the stream itself
+        param_bytes = sum(int(x.size) * x.dtype.itemsize
+                          for x in jax.tree.leaves(params0))
+        tracer.metadata(
+            arch=args.arch, strategy=args.strategy, steps=args.steps,
+            topology=spec.to_str() if spec is not None else None,
+            n_replicas=R, local_world=args.local_world,
+            b_max=(spec.outer.period if spec is not None
+                   and spec.outer.period is not None else args.b_max),
+            wire_format=args.wire_format, exchange_impl=args.exchange_impl,
+            overlap=args.overlap, param_bytes=param_bytes,
+            procs=dist.num_processes if args.distributed else 1,
+            seed=args.seed, tiny=bool(args.tiny))
 
     # a supervised regroup epoch (launcher relaunched us after a real
     # process death) turns into a fault-plan run: resume from the newest
@@ -364,12 +407,15 @@ def main():
 
         if health is not None:
             health.phase("train")
+        if tracer is not None and strategy.controller is not None:
+            strategy.controller.tracer = tracer
         report = run_with_faults(strategy, params0, daso_data, lr_fn,
                                  args.steps, plan,
                                  ckpt_every=args.ckpt_every,
                                  ckpt_cb=ckpt_cb, placement=placement,
                                  start_step=start_step, carry=carry,
-                                 membership=membership, health=health)
+                                 membership=membership, health=health,
+                                 tracer=tracer)
         result = report.result
         if prior_losses:
             result.losses = prior_losses + result.losses
@@ -385,7 +431,8 @@ def main():
         if health is not None:
             health.phase("train")
         result = run_training(loss_fn, params0, data_fn, loop_cfg,
-                              lr_fn=lr_fn, log=say, health=health)
+                              lr_fn=lr_fn, log=say, health=health,
+                              tracer=tracer)
     if health is not None:
         health.phase("finalize")
     if result.executor_stats is not None:
@@ -394,6 +441,17 @@ def main():
             f"{args.steps} steps ({s.compiles} compiled cycle shapes, "
             f"{s.fallback_steps} tail-fallback steps, "
             f"{s.invalidations} invalidations)")
+
+    comm_rows = None
+    if tracer is not None and result.controller is not None:
+        # per-level comm accounting over the whole run, carried both in
+        # the trace (counter event) and the metrics JSON
+        from repro.obs import meters
+        ctrl = result.controller
+        comm_rows = meters.level_bytes_report(
+            params0, ctrl.level_sync_counts(), ctrl.cfg, topo=spec,
+            outer_split=meters.outer_sync_split(ctrl.history))
+        tracer.counter("comm_meters", meters.rows_as_counter(comm_rows))
 
     if args.ckpt and (not args.distributed or jax.process_index() == 0):
         save_checkpoint(args.ckpt, result.params, step=args.steps)
@@ -414,11 +472,25 @@ def main():
                 "simulated_time_s": report.simulated_time_s}
             if live_meta is not None:
                 metrics["resilience"]["live"] = live_meta
+        if comm_rows is not None:
+            metrics["comm_meters"] = [
+                {**dataclasses.asdict(r), "total_bytes": r.total_bytes}
+                for r in comm_rows]
         with open(args.metrics_out, "w") as f:
             json.dump(metrics, f)
         print(f"[train] metrics -> {args.metrics_out}")
     if health is not None:
         health.close()
+    if tracer is not None:
+        tracer.close()
+        if not args.distributed:
+            # single-process runs merge their own (only) stream so
+            # --trace-out names a ready run trace; distributed runs leave
+            # the merge to tools/launch_procs.py after the group exits
+            from repro.obs.trace import merge_streams
+            merge_streams(args.trace_out, log=say)
+        say(f"[train] trace events={tracer.n_events} "
+            f"overhead={tracer.overhead_s * 1e3:.1f}ms -> {args.trace_out}")
 
 
 if __name__ == "__main__":

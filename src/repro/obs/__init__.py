@@ -1,0 +1,25 @@
+"""Unified telemetry plane (PR 8).
+
+`trace.py` is the span/counter API every layer writes to — the executor
+wraps each dispatched program, the schedule/controller records decision
+events with reasons, the resilience runtime/supervisor records health and
+fault events — producing one JSONL trace stream per process (Chrome
+trace-event shaped, mergeable by tools/launch_procs.py and exportable by
+tools/trace_report.py).
+
+`meters.py` is the per-level communication accounting: bytes-on-the-wire
+per sync level derived from the flat-buffer arena sizes, wire formats, and
+the controller's `level_sync_counts`, cross-checkable against the HLO
+collective stats (launch/hlo_stats.py). The self-tuning-topology work
+(ROADMAP) consumes these readings directly.
+"""
+from repro.obs.trace import (NULL_TRACER, Tracer, load_events, merge_streams,
+                             stream_path, validate_event)
+from repro.obs.meters import (LevelMeter, crosscheck_hlo, level_bytes_report,
+                              outer_sync_split)
+
+__all__ = [
+    "NULL_TRACER", "Tracer", "load_events", "merge_streams", "stream_path",
+    "validate_event", "LevelMeter", "crosscheck_hlo", "level_bytes_report",
+    "outer_sync_split",
+]

@@ -108,9 +108,13 @@ class HealthMonitor:
     ordinary exception could never unwind a thread that is parked inside a
     gloo collective."""
 
-    def __init__(self, cfg: HealthConfig, proc_id: int):
+    def __init__(self, cfg: HealthConfig, proc_id: int, *, tracer=None):
         self.cfg = cfg
         self.proc_id = proc_id
+        # obs.trace sink: phase flips become "phase" instants in the run
+        # trace, so launcher-observed detection timings line up with the
+        # worker's own record (None = untraced, zero cost)
+        self.tracer = tracer
         self._lock = threading.Lock()
         self._phase = "start"
         self._step = -1
@@ -124,6 +128,9 @@ class HealthMonitor:
             self._phase = name
             self._deadline = time.monotonic() + self.cfg.watchdog_s
         self._write()  # phase flips are rare and the launcher times them
+        if self.tracer is not None:
+            self.tracer.instant("phase", cat="resilience", phase=name,
+                                epoch=self.cfg.epoch)
 
     def cycle_done(self, step: int) -> None:
         with self._lock:
@@ -145,6 +152,9 @@ class HealthMonitor:
         with self._lock:
             self._phase = "done"
         self._write()
+        if self.tracer is not None:
+            self.tracer.instant("phase", cat="resilience", phase="done",
+                                epoch=self.cfg.epoch)
         if self._thread is not None:
             self._thread.join(timeout=2 * self.cfg.hb_interval + 1)
 
@@ -191,6 +201,33 @@ def read_heartbeat(run_dir: str, epoch: int, proc_id: int) -> Optional[dict]:
             return json.load(f)
     except (OSError, json.JSONDecodeError):
         return None
+
+
+#: heartbeat wire format: required key -> type check. This IS the schema —
+#: the launcher's kill/supervise triggers key off `phase`/`step`, and the
+#: trace streams are written next to these files, so the two planes share
+#: one compatibility stance: required keys are stable, extra keys are
+#: always tolerated (tests/test_obs.py round-trips both directions).
+HEARTBEAT_SCHEMA = {
+    "proc": lambda v: isinstance(v, int) and v >= 0,
+    "epoch": lambda v: isinstance(v, int) and v >= 0,
+    "phase": lambda v: isinstance(v, str) and bool(v),
+    "step": lambda v: isinstance(v, int),
+    "t": lambda v: isinstance(v, (int, float)) and v >= 0,
+}
+
+
+def validate_heartbeat(doc) -> Optional[str]:
+    """Schema check for one heartbeat document; error string or None.
+    Unknown keys pass — forward compatibility is part of the contract."""
+    if not isinstance(doc, dict):
+        return f"heartbeat is {type(doc).__name__}, not an object"
+    for key, ok in HEARTBEAT_SCHEMA.items():
+        if key not in doc:
+            return f"missing required key {key!r}"
+        if not ok(doc[key]):
+            return f"bad value for {key!r}: {doc[key]!r}"
+    return None
 
 
 # -- regroup protocol ---------------------------------------------------------

@@ -69,7 +69,7 @@ def run_with_faults(strategy: Strategy, params0, data_fn: Callable,
                     placement=None,
                     start_step: int = 0, carry=None,
                     membership=None,
-                    health=None) -> ResilienceReport:
+                    health=None, tracer=None) -> ResilienceReport:
     """Run `n_steps` of compiled training while replaying `plan`.
 
     `strategy` must be a replica-axis strategy (daso / hier_daso /
@@ -119,6 +119,8 @@ def run_with_faults(strategy: Strategy, params0, data_fn: Callable,
     ex, placement = resolve_executor(strategy, executor, placement)
     if health is not None and ex.health is None:
         ex.health = health
+    if tracer is not None and not ex.tracer.enabled:
+        ex.tracer = tracer
     if membership is not None and any(m <= 0.0 for m in mask):
         # the checkpoint was taken under a reduced active set: rebuild the
         # step variants with its mask baked in before anything compiles
@@ -188,7 +190,13 @@ def run_with_faults(strategy: Strategy, params0, data_fn: Callable,
     step = start_step
     while step < n_steps:
         for ev in plan.events_at(step):
-            apply_event(ev, step)
+            # the span covers membership surgery + cache invalidation; the
+            # recompile it provokes lands in the NEXT cycle span (its
+            # fresh_compile flag — same attribution as first_cycle_s)
+            with ex.tracer.span("fault_event", cat="resilience",
+                                kind=ev.kind, step=step,
+                                replica=ev.replica, factor=ev.factor):
+                apply_event(ev, step)
         # cut the cycle at the next fault boundary: events must land
         # between compiled cycles, mirroring the plateau-window cut
         max_len = min(ex.max_cycle_len, n_steps - step)
@@ -217,7 +225,9 @@ def run_with_faults(strategy: Strategy, params0, data_fn: Callable,
         strategy.observe(cycle_losses)
         step += len(cycle_plan)
         if next_ckpt is not None and ckpt_cb is not None and step >= next_ckpt:
-            ckpt_cb(step, carry, losses)
+            with ex.tracer.span("checkpoint_save", cat="checkpoint",
+                                step=step):
+                ckpt_cb(step, carry, losses)
             next_ckpt = (step // ckpt_every + 1) * ckpt_every
 
     final = (placement.finalize_params(strategy, carry)

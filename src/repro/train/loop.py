@@ -160,7 +160,7 @@ def run_training(loss_fn: Callable, params0, data_fn: Callable,
                  cfg: TrainLoopConfig, *, optimizer: Optional[Optimizer] = None,
                  lr_fn: Optional[Callable] = None,
                  log: Optional[Callable] = print,
-                 health=None) -> SimResult:
+                 health=None, tracer=None) -> SimResult:
     """data_fn(step) -> batch. For daso/local_sgd strategies the batch must
     carry the leading replica axis; for sync it is flat.
 
@@ -170,7 +170,13 @@ def run_training(loss_fn: Callable, params0, data_fn: Callable,
 
     `health` (resilience.runtime.HealthMonitor) threads the live-fault
     heartbeat/watchdog into the macro executor — supervised multi-process
-    runs only (launch/train.py wires it from the launcher environment)."""
+    runs only (launch/train.py wires it from the launcher environment).
+
+    `tracer` (obs.trace.Tracer) threads the telemetry plane through the
+    macro executor (cycle/overlap/checkpoint spans) and the strategy's
+    controller (decision events) — launch/train.py wires it from
+    --trace-out. The per-step reference path is deliberately untraced:
+    it exists as a numerics oracle, not a performance surface."""
     optimizer = optimizer or sgd(momentum=0.9, weight_decay=1e-4)
     lr_fn = lr_fn or constant_lr(cfg.lr)
     if cfg.executor not in ("macro", "per_step"):
@@ -182,6 +188,8 @@ def run_training(loss_fn: Callable, params0, data_fn: Callable,
                          "dispatch; run supervised jobs with "
                          "--executor macro")
     strategy = build_strategy(loss_fn, cfg, optimizer)
+    if tracer is not None and strategy.controller is not None:
+        strategy.controller.tracer = tracer
 
     placement = None
     if cfg.distributed:
@@ -252,7 +260,8 @@ def run_training(loss_fn: Callable, params0, data_fn: Callable,
     else:
         executor = MacroCycleExecutor(
             strategy, max_cycle_len=cfg.max_cycle_len, placement=placement,
-            serial_exchange=cfg.overlap_serial_exchange, health=health)
+            serial_exchange=cfg.overlap_serial_exchange, health=health,
+            tracer=tracer)
         result = run_compiled_training(
             strategy, params0, data_fn, lr_fn, cfg.n_steps,
             executor=executor, start_step=start_step, carry=carry,

@@ -273,6 +273,28 @@ def test_overlap_macro_matches_per_step():
     assert macro.executor_stats.overlap_cycles > 0
 
 
+@pytest.mark.parametrize("serial", [False, True])
+def test_overlap_stats_legs_partition_wall(serial):
+    """The overlap timing legs are an EXACT partition of the overlap wall
+    time: every leg ends on block_until_ready at a boundary timestamp that
+    is also where the next leg starts (core/executor.py::_run_overlap), so
+    compute + visible (or blocking) + merge == wall to float addition."""
+    r = _run("one_cycle", "macro", serial_exchange=serial)
+    st = r.executor_stats
+    assert st.overlap_cycles > 0
+    legs = (st.overlap_compute_s + st.overlap_exchange_visible_s
+            + st.overlap_exchange_blocking_s + st.overlap_merge_s)
+    assert st.overlap_wall_s > 0.0
+    assert legs == pytest.approx(st.overlap_wall_s, rel=1e-9, abs=1e-9)
+    # the mode under test fills its leg, the other stays zero
+    if serial:
+        assert st.overlap_exchange_blocking_s > 0.0
+        assert st.overlap_exchange_visible_s == 0.0
+    else:
+        assert st.overlap_exchange_visible_s > 0.0
+        assert st.overlap_exchange_blocking_s == 0.0
+
+
 def test_serial_exchange_identical_numerics():
     """serial_exchange (the benchmark's blocking baseline leg) changes
     only WHEN the host waits — losses and params must be bit-identical."""

@@ -93,6 +93,24 @@ def topology_spec(child_args):
     return TopologySpec.load(spec_arg)
 
 
+def merge_trace(child_args) -> None:
+    """Merge the per-process trace streams of a --trace-out run into the
+    single run trace at that path. Called after the group exits — the only
+    point where no worker can still be appending; crashed workers' partial
+    streams merge fine (every event line is self-contained JSONL)."""
+    base = child_flag_value(child_args, "--trace-out")
+    if base is None:
+        return
+    sys.path.insert(0, SRC)
+    from repro.obs.trace import merge_streams
+    say = lambda m: print(f"[launch_procs] {m}", file=sys.stderr)
+    try:
+        if merge_streams(base, log=say) is None:
+            say(f"no trace streams found at {base}.e*p*.jsonl")
+    except (OSError, ValueError) as e:
+        say(f"trace merge failed: {e}")
+
+
 def derive_local_devices(child_args, procs: int) -> int:
     """world/procs from a --topology spec in the child args, else 1.
     Handles both the two-token form (``--topology SPEC``) and the
@@ -212,6 +230,7 @@ def launch(procs: int, child_args, *, module: str = "repro.launch.train",
     # never report success
     codes = [c if c == 124 else p.returncode
              for c, p in zip(codes, children)]
+    merge_trace(child_args)
     return max(abs(c) for c in codes)
 
 
@@ -379,6 +398,9 @@ def supervise(procs: int, child_args, *,
         report["kill"] = {"proc": kill[0], "step": kill[1]}
 
     def finish(code: int) -> int:
+        # a regrouped run leaves one stream per (epoch, proc); the merge
+        # interleaves them all into one timeline
+        merge_trace(child_args)
         report["exit_code"] = code
         report["ok"] = code == 0
         if report_path:
