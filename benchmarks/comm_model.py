@@ -233,3 +233,137 @@ def topology_step_s(spec, param_bytes_fp32: float, *,
                  + (1 - nonblocking_hidden) * outer["step_s"])
     t_blocking = t_compute_s + inner_s + outer["sync_s"]
     return blocking_frac * t_blocking + (1 - blocking_frac) * t_cycling
+
+
+# -- strategy-family terms -----------------------------------------------------
+# One cost/bytes term per registered strategy (core/baselines.py expansion):
+# the numbers behind BENCH_strategies.json's loss-vs-simulated-time and
+# loss-vs-bytes curves, and docs/strategies.md's which-strategy-pays-which-
+# bytes table. All share the ClusterModel's NVLink/IB pair; differences are
+# purely in WHAT crosses the slow tier and HOW OFTEN:
+#
+#   sync      — full ring all-reduce over all nodes, EVERY step, blocking.
+#   daso      — ring all-reduce every B steps, non-blocking (mostly hidden).
+#   local_sgd — ring all-reduce every B steps, blocking (hard average).
+#   easgd     — ring all-reduce of the params every B steps, blocking
+#               (center update); same wire shape as local_sgd.
+#   downpour  — ring all-reduce of the deltas every B steps, blocking
+#               (masked delta-sum push); same wire shape as local_sgd.
+#   gossip    — ONE partner copy per node every B steps (point-to-point,
+#               no reduction): nbytes over the wire instead of the ring's
+#               2*nbytes*(M-1)/M, and no (M-1) latency chain.
+
+def pairwise_exchange_s(nbytes: float, bw: float,
+                        latency: float = 0.0) -> float:
+    """One gossip partner copy: each node ships its payload to exactly one
+    peer (and receives one) — a single traversal of the slow link, no ring
+    factor, one hop of latency."""
+    return nbytes / bw + latency
+
+
+def gossip_step_s(param_bytes_fp32: float, n_nodes: int, c: ClusterModel,
+                  *, b: int = 4, blocking_frac: float = 0.2,
+                  wire_format: str = "bf16",
+                  dcn_scale: float = 1.0,
+                  int8_block: int = 256) -> float:
+    """Per-step wall-clock of the gossip baseline: local NVLink gradient
+    all-reduce every step; one pairwise partner copy every B cycling
+    steps; warm-up/cool-down steps still pay the FULL ring all-reduce
+    (blocking mode is a true global average for every strategy)."""
+    t_local = ring_allreduce_s(param_bytes_fp32, c.gpus_per_node,
+                               c.nvlink_bw, latency=3e-6)
+    nbytes = model_wire_bytes(param_bytes_fp32, wire_format,
+                              int8_block=int8_block)
+    t_pair = pairwise_exchange_s(nbytes, c.ib_bw * c.ib_eff * dcn_scale,
+                                 latency=c.step_latency_s)
+    t_ring = degraded_exchange_s(param_bytes_fp32, n_nodes, c,
+                                 wire_format=wire_format,
+                                 dcn_scale=dcn_scale,
+                                 int8_block=int8_block)
+    t_cycling = c.t_compute_s + t_local + t_pair / b
+    t_blocking = c.t_compute_s + t_local + t_ring
+    return blocking_frac * t_blocking + (1 - blocking_frac) * t_cycling
+
+
+def periodic_blocking_step_s(param_bytes_fp32: float, n_nodes: int,
+                             c: ClusterModel, *, b: int = 4,
+                             blocking_frac: float = 0.2,
+                             wire_format: str = "bf16",
+                             dcn_scale: float = 1.0,
+                             int8_block: int = 256) -> float:
+    """Shared cost shape of local_sgd / easgd / downpour: one BLOCKING
+    ring all-reduce over the group every B cycling steps (hard average /
+    center update / delta push — identical wire traffic), the full
+    exchange during warm-up/cool-down."""
+    t_local = ring_allreduce_s(param_bytes_fp32, c.gpus_per_node,
+                               c.nvlink_bw, latency=3e-6)
+    t_ring = degraded_exchange_s(param_bytes_fp32, n_nodes, c,
+                                 wire_format=wire_format,
+                                 dcn_scale=dcn_scale,
+                                 int8_block=int8_block)
+    t_cycling = c.t_compute_s + t_local + t_ring / b
+    t_blocking = c.t_compute_s + t_local + t_ring
+    return blocking_frac * t_blocking + (1 - blocking_frac) * t_cycling
+
+
+def sync_step_s(param_bytes_fp32: float, n_nodes: int,
+                c: ClusterModel, *, wire_format: str = "f32",
+                dcn_scale: float = 1.0) -> float:
+    """The synchronous baseline: a blocking global parameter all-reduce
+    EVERY step (b=1, no cycling phase)."""
+    t_local = ring_allreduce_s(param_bytes_fp32, c.gpus_per_node,
+                               c.nvlink_bw, latency=3e-6)
+    t_ring = degraded_exchange_s(param_bytes_fp32, n_nodes, c,
+                                 wire_format=wire_format,
+                                 dcn_scale=dcn_scale)
+    return c.t_compute_s + t_local + t_ring
+
+
+def strategy_step_s(name: str, param_bytes_fp32: float, n_nodes: int,
+                    c: ClusterModel, *, b: int = 4,
+                    blocking_frac: float = 0.2,
+                    wire_format: str = "bf16",
+                    dcn_scale: float = 1.0) -> float:
+    """Analytic per-step wall-clock for any registered strategy name —
+    the single dispatch point BENCH_strategies.json prices every curve
+    through."""
+    if name == "sync":
+        return sync_step_s(param_bytes_fp32, n_nodes, c,
+                           wire_format="f32", dcn_scale=dcn_scale)
+    if name == "daso":
+        return daso_step_s(param_bytes_fp32, n_nodes, c, b=b,
+                           blocking_frac=blocking_frac,
+                           wire_format=wire_format, dcn_scale=dcn_scale)
+    if name == "gossip":
+        return gossip_step_s(param_bytes_fp32, n_nodes, c, b=b,
+                             blocking_frac=blocking_frac,
+                             wire_format=wire_format, dcn_scale=dcn_scale)
+    if name in ("local_sgd", "easgd", "downpour"):
+        return periodic_blocking_step_s(param_bytes_fp32, n_nodes, c, b=b,
+                                        blocking_frac=blocking_frac,
+                                        wire_format=wire_format,
+                                        dcn_scale=dcn_scale)
+    raise ValueError(f"no cost model for strategy {name!r}")
+
+
+def strategy_bytes_per_step(name: str, param_bytes_fp32: float,
+                            n_nodes: int, *, b: int = 4,
+                            wire_format: str = "bf16",
+                            int8_block: int = 256) -> float:
+    """Slow-tier (inter-node) wire bytes ONE node pays per cycling-phase
+    step — the x-axis of the loss-vs-bytes curves. Ring members each move
+    ~2*nbytes*(M-1)/M per exchange; a gossip node moves exactly nbytes
+    (its one outgoing partner copy). The sync baseline ships f32 every
+    step; the periodic family amortizes its exchange over B. Warm-up/
+    cool-down is excluded: every strategy pays the identical blocking
+    average there, so steady-state cycling traffic is the comparison."""
+    if name == "sync":
+        nbytes = model_wire_bytes(param_bytes_fp32, "f32")
+        return 2.0 * nbytes * (n_nodes - 1) / n_nodes
+    nbytes = model_wire_bytes(param_bytes_fp32, wire_format,
+                              int8_block=int8_block)
+    if name == "gossip":
+        return nbytes / b
+    if name in ("daso", "local_sgd", "easgd", "downpour"):
+        return 2.0 * nbytes * (n_nodes - 1) / n_nodes / b
+    raise ValueError(f"no bytes model for strategy {name!r}")

@@ -19,7 +19,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig6,fig7,fig8,fig9,micro,exchange,"
-                         "resilience,topology,overlap,obs,roofline")
+                         "resilience,topology,overlap,obs,roofline,"
+                         "strategies")
     ap.add_argument("--quick", action="store_true",
                     help="shorter convergence runs")
     args = ap.parse_args()
@@ -29,7 +30,7 @@ def main() -> None:
         return only is None or tag in only
 
     from benchmarks import (figures, microbench, obs, overlap, resilience,
-                            roofline, topology)
+                            roofline, strategies, topology)
 
     print("name,us_per_call,derived")
     if want("fig6"):
@@ -54,6 +55,8 @@ def main() -> None:
         obs.emit_rows(emit, quick=args.quick)
     if want("roofline"):
         roofline.emit_rows(emit)
+    if want("strategies"):
+        strategies.emit_rows(emit, quick=args.quick)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,185 @@
+"""Strategy-family ablation benchmark: the six registered strategies on
+one shared problem (BENCH_strategies.json).
+
+Every registered strategy (sync / daso / local_sgd + the baseline
+expansion gossip / easgd / downpour from core/baselines.py) trains the
+shared tiny MLP from the same seed and data stream, through the same
+macro-cycle executor. Three views land in one record:
+
+  * **quality** — full loss curves, final loss, sync fraction; every
+    strategy must actually train (trains_all gate) and stay finite;
+  * **numerics** — macro executor vs the per-step reference path, max
+    loss delta across all six (the conformance suite's equivalence
+    check, re-asserted as a regression number);
+  * **cost curves** — `comm_model.strategy_step_s` /
+    `strategy_bytes_per_step` price each strategy's slow-tier traffic at
+    paper scale (ResNet-50-ish bytes, the ClusterModel's NVLink/IB
+    pair), giving the loss-vs-simulated-time and loss-vs-bytes axes:
+    gossip's single partner copy must beat the sync ring strictly
+    (bytes_per_step_*_vs_sync / model_step_ratio gates).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_SCRIPT = """
+import json
+import os
+import time
+import jax, jax.numpy as jnp
+import numpy as np
+
+from repro.core.daso import DasoConfig
+from repro.core.executor import (get_strategy, list_strategies,
+                                 make_strategy, run_compiled_training)
+from repro.core.simulator import run_per_step_training
+from repro.optim.optimizers import sgd
+from repro.optim.schedules import constant_lr
+
+from benchmarks.comm_model import (ClusterModel, strategy_bytes_per_step,
+                                   strategy_step_s)
+
+QUICK = os.environ.get("BENCH_QUICK") == "1"
+OUT = os.environ.get("BENCH_STRATEGIES_OUT", "BENCH_strategies.json")
+
+R, per, d = 4, 8, 8
+n_steps = 60 if QUICK else 120
+key = jax.random.PRNGKey(0)
+w1 = jax.random.normal(key, (d, 16)) * 0.5
+k1, k2 = jax.random.split(jax.random.fold_in(key, 7))
+params0 = {"w1": jax.random.normal(k1, (d, 16)) * 0.3,
+           "w2": jax.random.normal(k2, (16, 1)) * 0.3}
+
+def loss_fn(params, batch):
+    h = jnp.tanh(batch["x"] @ params["w1"])
+    pred = h @ params["w2"]
+    return jnp.mean((pred - batch["y"]) ** 2), {}
+
+def data_fn(step):
+    k = jax.random.fold_in(key, step)
+    x = jax.random.normal(k, (R, per, d))
+    return {"x": x, "y": jnp.tanh(x @ w1).sum(-1, keepdims=True) * 0.3}
+
+def sync_data_fn(step):
+    b = data_fn(step)
+    return {k: v.reshape((-1,) + v.shape[2:]) for k, v in b.items()}
+
+STRATEGIES = ("sync", "daso", "local_sgd", "gossip", "easgd", "downpour")
+# delta-sum semantics scale downpour's effective push by n_active; 1/R
+# recovers the mean-delta push so all six train at the shared lr
+EXTRA = {"downpour": {"push_scale": 1.0 / R}}
+
+def build(name):
+    opt = sgd(momentum=0.9, weight_decay=1e-4)
+    if name == "sync":
+        return make_strategy("sync", loss_fn, opt), sync_data_fn
+    cfg = DasoConfig(n_replicas=R, global_world=4 * R, b_max=4,
+                     warmup_steps=n_steps // 10,
+                     cooldown_steps=n_steps // 10, total_steps=n_steps)
+    cls = get_strategy(name)
+    strat = make_strategy(name, loss_fn, opt, cfg,
+                          controller=cls.make_controller(cfg,
+                                                         loss_window=20),
+                          **EXTRA.get(name, {}))
+    return strat, data_fn
+
+# paper-scale pricing: ResNet-50-ish f32 payload over the JUWELS pair
+PB = 97.5e6 * 4
+cluster = ClusterModel()
+
+per_strategy = {}
+for name in STRATEGIES:
+    strat, df = build(name)
+    ref, _ = build(name)
+    t0 = time.perf_counter()
+    res = run_compiled_training(strat, params0, df, constant_lr(0.1),
+                                n_steps)
+    wall = time.perf_counter() - t0
+    rp = run_per_step_training(ref, params0, df, constant_lr(0.1), n_steps)
+    delta = max(abs(a - b) for a, b in zip(res.losses, rp.losses))
+    sim_s = strategy_step_s(name, PB, R, cluster, b=4, blocking_frac=0.2)
+    bps = strategy_bytes_per_step(name, PB, R, b=4)
+    per_strategy[name] = {
+        "losses": [round(x, 6) for x in res.losses],
+        "first_loss": res.losses[0],
+        "final_loss": res.final_loss,
+        "sync_fraction": res.sync_fraction,
+        "macro_vs_per_step_delta": delta,
+        "us_per_step": wall / n_steps * 1e6,
+        "model_step_s": sim_s,
+        "model_bytes_per_step": bps,
+        "sim_time_to_final_s": sim_s * n_steps,
+        "bytes_to_final": bps * n_steps,
+    }
+    print(f"CSV strategies_{name} {wall / n_steps * 1e6:.1f} "
+          f"final={res.final_loss:.4f} sync_frac={res.sync_fraction:.3f} "
+          f"model_step_s={sim_s:.4f} bytes_per_step={bps:.3e}")
+
+sync_row = per_strategy["sync"]
+derived = {
+    "n_strategies": float(len(per_strategy)),
+    "registry_covers_all": float(
+        set(STRATEGIES) <= set(list_strategies())),
+    "all_finite": float(all(np.all(np.isfinite(v["losses"]))
+                            for v in per_strategy.values())),
+    "trains_all": float(all(v["final_loss"] < v["first_loss"]
+                            for v in per_strategy.values())),
+    "macro_vs_per_step_max_delta": max(
+        v["macro_vs_per_step_delta"] for v in per_strategy.values()),
+    "max_final_loss": max(v["final_loss"] for v in per_strategy.values()),
+    "bytes_per_step_gossip_vs_sync": (
+        per_strategy["gossip"]["model_bytes_per_step"]
+        / sync_row["model_bytes_per_step"]),
+    "bytes_per_step_easgd_vs_sync": (
+        per_strategy["easgd"]["model_bytes_per_step"]
+        / sync_row["model_bytes_per_step"]),
+    "bytes_per_step_downpour_vs_sync": (
+        per_strategy["downpour"]["model_bytes_per_step"]
+        / sync_row["model_bytes_per_step"]),
+    "model_step_ratio_gossip_vs_sync": (
+        per_strategy["gossip"]["model_step_s"]
+        / sync_row["model_step_s"]),
+    "model_step_ratio_daso_vs_sync": (
+        per_strategy["daso"]["model_step_s"]
+        / sync_row["model_step_s"]),
+}
+record = {"benchmark": "strategies",
+          "config": {"n_replicas": R, "n_steps": n_steps, "quick": QUICK,
+                     "b_max": 4, "lr": 0.1, "param_bytes_model": PB,
+                     "push_scale_downpour": 1.0 / R,
+                     "strategies": list(STRATEGIES)},
+          "per_strategy": per_strategy,
+          "derived": derived}
+with open(OUT, "w") as f:
+    json.dump(record, f, indent=2)
+print(f"CSV strategies_summary 0.0 "
+      f"max_delta={derived['macro_vs_per_step_max_delta']:.2e} "
+      f"gossip_bytes_vs_sync={derived['bytes_per_step_gossip_vs_sync']:.4f} "
+      f"trains_all={derived['trains_all']:.0f} json={OUT}")
+"""
+
+
+def emit_rows(emit, *, quick=False):
+    """All six registered strategies on the shared tiny MLP (same seed and
+    data): loss curves + macro-vs-per-step deltas + analytic cost axes.
+    Writes the record to $BENCH_STRATEGIES_OUT
+    (default ./BENCH_strategies.json)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (SRC + os.pathsep
+                         + os.path.join(os.path.dirname(__file__), "..")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env["BENCH_QUICK"] = "1" if quick else "0"
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(_SCRIPT)],
+                       capture_output=True, text=True, timeout=900, env=env)
+    if r.returncode != 0:
+        emit("strategies_sweep_FAILED", 0.0, r.stderr[-200:])
+        return
+    for line in r.stdout.splitlines():
+        if line.startswith("CSV "):
+            _, name, us, derived = line.split(" ", 3)
+            emit(name, float(us), derived)

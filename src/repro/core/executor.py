@@ -34,6 +34,7 @@ per-step reference path that the equivalence tests compare against
 """
 from __future__ import annotations
 
+import difflib
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
@@ -105,8 +106,10 @@ def get_strategy(name: str) -> type:
     try:
         return _REGISTRY[name]
     except KeyError:
+        hint = difflib.get_close_matches(name, _REGISTRY, n=1)
+        suggest = f"; did you mean {hint[0]!r}?" if hint else ""
         raise KeyError(f"unknown strategy {name!r}; registered: "
-                       f"{sorted(_REGISTRY)}") from None
+                       f"{sorted(_REGISTRY)}{suggest}") from None
 
 
 def list_strategies() -> List[str]:
@@ -180,6 +183,16 @@ class Strategy:
 
     def divergence(self, carry) -> Optional[float]:
         return None
+
+    # -- controller factory ------------------------------------------------
+    @classmethod
+    def make_controller(cls, cfg: Optional[DasoConfig], *,
+                        loss_window: int = 50):
+        """The controller class this strategy schedules with — train/loop.py
+        resolves it through here so strategies whose mode tokens need a
+        non-default controller (core/baselines.py) stay registry-driven."""
+        return (DasoController(cfg, loss_window=loss_window)
+                if cfg is not None else None)
 
 
 @register_strategy("daso")
@@ -766,7 +779,8 @@ def shape_sync_counts(shape: CycleShape) -> Dict[str, int]:
         outer, inner = split_mode(m)
         if split_ov(outer)[0] in (Mode.SEND, Mode.SEND_RECEIVE,
                                   Mode.BLOCKING, Mode.HARD_AVG,
-                                  Mode.OV_SYNC):
+                                  Mode.OV_SYNC, Mode.GOSSIP,
+                                  Mode.ELASTIC, Mode.PUSH):
             counts["_outer"] += 1
         for name in inner:
             counts[name] = counts.get(name, 0) + 1
@@ -894,3 +908,9 @@ def run_compiled_training(strategy: Strategy, params0, data_fn: Callable,
                      sync_fraction=strategy.sync_fraction(),
                      controller=strategy.controller, divergence=divs,
                      executor_stats=ex.stats)
+
+
+# registered on import so every registry consumer (launch/train.py argparse
+# choices, train/loop.py, the conformance suite) sees the baseline family;
+# imported last because baselines.py subclasses DasoStrategy from this module
+from repro.core import baselines  # noqa: E402,F401

@@ -46,6 +46,14 @@ class Mode:
     # see split_ov.
     OV_START = "ov_start"
     OV_SYNC = "ov_sync"
+    # baseline strategy family (core/baselines.py): GOSSIP carries its
+    # ring-shift as a "~s" suffix ("gossip~2"), reusing the split_ov
+    # mechanics so each shift compiles as its own step variant; ELASTIC is
+    # the EASGD center pull, PUSH the DOWNPOUR delta push — both one
+    # global all-reduce.
+    GOSSIP = "gossip"
+    ELASTIC = "elastic"
+    PUSH = "push"
 
 
 def split_ov(outer: str) -> Tuple[str, int]:
@@ -373,7 +381,10 @@ class DasoController:
             if split_ov(split_mode(m)[0])[0] in (Mode.SEND,
                                                  Mode.SEND_RECEIVE,
                                                  Mode.BLOCKING,
-                                                 Mode.OV_SYNC))
+                                                 Mode.OV_SYNC,
+                                                 Mode.GOSSIP,
+                                                 Mode.ELASTIC,
+                                                 Mode.PUSH))
         return touched / len(self.history)
 
     def level_sync_counts(self) -> Dict[str, int]:
@@ -386,7 +397,8 @@ class DasoController:
             outer, inner = split_mode(m)
             if split_ov(outer)[0] in (Mode.SEND, Mode.SEND_RECEIVE,
                                       Mode.BLOCKING, Mode.HARD_AVG,
-                                      Mode.OV_SYNC):
+                                      Mode.OV_SYNC, Mode.GOSSIP,
+                                      Mode.ELASTIC, Mode.PUSH):
                 counts["_outer"] += 1
             for name in inner:
                 counts[name] = counts.get(name, 0) + 1

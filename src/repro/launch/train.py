@@ -237,9 +237,10 @@ def main():
                       seed=args.seed)
     spec = None
     if args.topology:
-        if args.strategy not in ("daso", "hier_daso"):
-            ap.error("--topology drives the daso family "
-                     "(daso / hier_daso)")
+        if args.strategy not in ("daso", "hier_daso", "gossip", "easgd",
+                                 "downpour"):
+            ap.error("--topology drives the replica-axis strategies "
+                     "(daso / hier_daso / gossip / easgd / downpour)")
         from repro.topo import TopologySpec, derive_inner_periods
         spec = TopologySpec.load(args.topology)
         args.nodes, args.local_world = spec.n_replicas, spec.local_world
@@ -320,7 +321,7 @@ def main():
     if args.fault_plan or regroup is not None:
         if args.strategy == "sync":
             ap.error("--fault-plan requires a replica-axis strategy "
-                     "(daso / local_sgd)")
+                     "(daso / local_sgd / gossip / easgd / downpour)")
         if args.executor != "macro":
             ap.error("--fault-plan drives the macro-cycle supervisor; "
                      "--executor per_step is not supported with it")

@@ -32,9 +32,13 @@ from repro.core.schedule import Mode, split_mode, split_ov
 #: outer-mode tokens that cross the wire while training blocks on them
 #: (warm-up/cool-down full averages + the local-SGD hard average)
 _BLOCKING_OUTER = (Mode.BLOCKING, Mode.HARD_AVG)
-#: outer-mode tokens whose exchange is asynchronous (paper send family +
-#: the overlap merge)
-_ASYNC_OUTER = (Mode.SEND, Mode.SEND_RECEIVE, Mode.OV_SYNC)
+#: outer-mode tokens whose exchange crosses at the non-blocking wire tier
+#: (paper send family, the overlap merge, and the baseline-family
+#: exchanges of core/baselines.py — gossip partner copies, the EASGD
+#: center pull, DOWNPOUR delta pushes — which all price their payload at
+#: `wire_format_for(blocking=False)`)
+_ASYNC_OUTER = (Mode.SEND, Mode.SEND_RECEIVE, Mode.OV_SYNC,
+                Mode.GOSSIP, Mode.ELASTIC, Mode.PUSH)
 
 
 @dataclass

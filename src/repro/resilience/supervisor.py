@@ -31,7 +31,7 @@ from typing import Callable, Dict, List, Optional
 
 from repro.core.executor import (MacroCycleExecutor, Strategy,
                                  dispatch_planned_cycle, resolve_executor)
-from repro.core.schedule import Mode, split_mode
+from repro.core.schedule import Mode, split_mode, split_ov
 from repro.core.simulator import SimResult
 from repro.resilience.faults import FaultPlan
 from repro.resilience.membership import reseed_carry
@@ -40,7 +40,8 @@ from repro.resilience.membership import reseed_carry
 # exchange on the simulated clock; hierarchical mode tokens are split to
 # their outer action first — intermediate-level syncs ride faster links and
 # are not charged at the DCN rate)
-_SYNC_MODES = (Mode.SEND, Mode.SEND_RECEIVE, Mode.BLOCKING, Mode.HARD_AVG)
+_SYNC_MODES = (Mode.SEND, Mode.SEND_RECEIVE, Mode.BLOCKING, Mode.HARD_AVG,
+               Mode.GOSSIP, Mode.ELASTIC, Mode.PUSH)
 
 
 @dataclass
@@ -100,7 +101,8 @@ def run_with_faults(strategy: Strategy, params0, data_fn: Callable,
     cfg = strategy.cfg
     if cfg is None:
         raise ValueError("run_with_faults needs a replica-axis strategy "
-                         "with a DasoConfig (daso / hier_daso / local_sgd)")
+                         "with a DasoConfig (daso / hier_daso / local_sgd / "
+                         "gossip / easgd / downpour)")
     n_replicas = cfg.n_replicas
     if topo is None:
         topo = getattr(strategy, "topo", None)
@@ -218,7 +220,7 @@ def run_with_faults(strategy: Strategy, params0, data_fn: Callable,
         if exchange_cost_fn is not None:
             n_active = int(sum(mask))
             for mode, _ in cycle_plan.shape:
-                if split_mode(mode)[0] in _SYNC_MODES:
+                if split_ov(split_mode(mode)[0])[0] in _SYNC_MODES:
                     sim_time += exchange_cost_fn(n_active, dcn_scale)
         losses.extend(cycle_losses)
         metrics_log.extend(per_step_metrics)

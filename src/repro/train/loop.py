@@ -25,9 +25,9 @@ from typing import Callable, Optional
 from repro.checkpoint.io import (TrainState, load_train_state,
                                  save_train_state)
 from repro.core.daso import DasoConfig
-from repro.core.executor import (MacroCycleExecutor, list_strategies,
-                                 make_strategy, run_compiled_training)
-from repro.core.schedule import DasoController
+from repro.core.executor import (MacroCycleExecutor, get_strategy,
+                                 list_strategies, make_strategy,
+                                 run_compiled_training)
 from repro.core.simulator import SimResult, run_per_step_training
 from repro.optim.optimizers import Optimizer, sgd
 from repro.optim.schedules import constant_lr
@@ -86,14 +86,22 @@ class TrainLoopConfig:
     distributed: bool = False
 
 
+# strategies that take a topology spec purely for sizing — replica count,
+# world size, outer sync period — with no per-level sync schedule
+# (core/baselines.py; a spec with intermediate levels is rejected for them)
+_FLAT_TOPOLOGY_STRATEGIES = ("gossip", "easgd", "downpour")
+
+
 def resolve_topology(cfg: TrainLoopConfig):
     """The `TopologySpec` of this run, or None when cfg.topology is unset.
     Validates that the strategy is topology-capable."""
     if cfg.topology is None:
         return None
-    if cfg.strategy not in ("daso", "hier_daso"):
-        raise ValueError(f"topology specs drive the daso family; strategy "
-                         f"{cfg.strategy!r} does not take one")
+    if cfg.strategy not in (("daso", "hier_daso")
+                            + _FLAT_TOPOLOGY_STRATEGIES):
+        raise ValueError(f"topology specs drive the replica-axis strategies "
+                         f"(daso / hier_daso / gossip / easgd / downpour); "
+                         f"strategy {cfg.strategy!r} does not take one")
     from repro.topo import TopologySpec
     return TopologySpec.load(cfg.topology)
 
@@ -140,16 +148,22 @@ def build_strategy(loss_fn: Callable, cfg: TrainLoopConfig,
         # order-fixed chain formulation so the result is independent of
         # the process layout (the N-proc == 1-proc bit-exactness contract)
         deterministic_reduce=cfg.distributed)
-    if spec is not None:
+    if spec is not None and cfg.strategy not in _FLAT_TOPOLOGY_STRATEGIES:
         from repro.topo import build_topology_strategy
         return build_topology_strategy(loss_fn, optimizer, spec, dcfg,
                                        loss_window=cfg.loss_window)
+    if spec is not None and tuple(spec.inner_names()):
+        raise ValueError(
+            f"strategy {cfg.strategy!r} has no per-level sync schedule; "
+            f"topology spec carries intermediate levels "
+            f"{tuple(spec.inner_names())} — use a 2-level spec, or "
+            f"daso/hier_daso for hierarchical syncing")
     if cfg.strategy == "hier_daso":
         raise ValueError("strategy 'hier_daso' needs a topology spec "
                          "(TrainLoopConfig.topology / --topology)")
-    controller = DasoController(dcfg, loss_window=cfg.loss_window)
-    return make_strategy(cfg.strategy, loss_fn, optimizer, dcfg,
-                         controller=controller)
+    cls = get_strategy(cfg.strategy)
+    controller = cls.make_controller(dcfg, loss_window=cfg.loss_window)
+    return cls(loss_fn, optimizer, dcfg, controller=controller)
 
 
 def ckpt_step_dir(ckpt_dir: str, step: int) -> str:

@@ -269,6 +269,38 @@ def test_outer_sync_split():
     assert meters.outer_sync_split([]) == {"blocking": 0, "nonblocking": 0}
 
 
+@pytest.mark.parametrize("name", ["gossip", "downpour"])
+def test_meters_account_baseline_strategy_traffic(name):
+    """Every exchange the gossip/downpour controllers emit lands in the
+    outer meter row — exchange tokens price at the nonblocking tier,
+    warm-up/cool-down at the blocking tier, and the row's sync count
+    equals the history's non-local step count (no orphan bytes)."""
+    n_steps = 20
+    key = jax.random.PRNGKey(11)
+    params0, loss_fn, daso_data, _ = make_mlp_problem(key)
+    cfg = TrainLoopConfig(strategy=name, n_steps=n_steps, n_replicas=2,
+                          local_world=2, b_max=4, lr=0.1, loss_window=10)
+    res = run_training(loss_fn, params0, daso_data, cfg, log=None)
+    ctl = res.controller
+    n_exchanges = sum(1 for (_, m, _, _) in ctl.history if m != "local")
+    assert n_exchanges > 0
+    split = meters.outer_sync_split(ctl.history)
+    # the strategy's own exchange token (gossip~s / push) is classified
+    # nonblocking; the warm-up/cool-down averages blocking; nothing falls
+    # through unpriced
+    assert split["nonblocking"] > 0 and split["blocking"] > 0
+    assert split["blocking"] + split["nonblocking"] == n_exchanges
+    counts = ctl.level_sync_counts()
+    assert counts == {"_outer": n_exchanges}
+    rows = meters.level_bytes_report(res.params, counts, ctl.cfg,
+                                     outer_split=split)
+    assert sum(r.syncs for r in rows) == n_exchanges
+    assert all(r.bytes_per_sync > 0 for r in rows)
+    flat = meters.rows_as_counter(rows)
+    priced = sum(v for k, v in flat.items() if k.endswith(".syncs"))
+    assert priced == n_exchanges
+
+
 def test_level_bytes_report_splits_outer_by_wire_tier():
     from repro.core.compression import transfer_bytes
     from repro.topo import TopologySpec

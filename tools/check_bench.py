@@ -107,6 +107,23 @@ POLICIES = {
         # the drift table prices every sync level of the 3-level topology
         "drift_levels_covered": ("bounds", (2, None)),
     },
+    "BENCH_strategies.json": {
+        # the whole registered family ran, stayed finite, and trained
+        "n_strategies": ("exact", 6.0),
+        "registry_covers_all": ("exact", 1.0),
+        "all_finite": ("exact", 1.0),
+        "trains_all": ("exact", 1.0),
+        # macro executor == per-step reference across every strategy
+        "macro_vs_per_step_max_delta": ("bounds", (None, 1e-4)),
+        # gossip's single partner copy must strictly undercut the sync
+        # ring, in wire bytes AND modeled step time; the periodic family
+        # amortizes its ring over B, so it must undercut sync too
+        "bytes_per_step_gossip_vs_sync": ("bounds_strict", (None, 1.0)),
+        "bytes_per_step_easgd_vs_sync": ("bounds_strict", (None, 1.0)),
+        "bytes_per_step_downpour_vs_sync": ("bounds_strict", (None, 1.0)),
+        "model_step_ratio_gossip_vs_sync": ("bounds_strict", (None, 1.0)),
+        "model_step_ratio_daso_vs_sync": ("bounds_strict", (None, 1.0)),
+    },
     "BENCH_topology.json": {
         "two_level_param_delta": ("exact", 0.0),
         "two_level_loss_delta": ("exact", 0.0),
