@@ -20,7 +20,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig6,fig7,fig8,fig9,micro,exchange,"
                          "resilience,topology,overlap,obs,roofline,"
-                         "strategies")
+                         "strategies,tuning")
     ap.add_argument("--quick", action="store_true",
                     help="shorter convergence runs")
     args = ap.parse_args()
@@ -30,7 +30,7 @@ def main() -> None:
         return only is None or tag in only
 
     from benchmarks import (figures, microbench, obs, overlap, resilience,
-                            roofline, strategies, topology)
+                            roofline, strategies, topology, tuning)
 
     print("name,us_per_call,derived")
     if want("fig6"):
@@ -57,6 +57,8 @@ def main() -> None:
         roofline.emit_rows(emit)
     if want("strategies"):
         strategies.emit_rows(emit, quick=args.quick)
+    if want("tuning"):
+        tuning.emit_rows(emit, quick=args.quick)
 
 
 if __name__ == "__main__":

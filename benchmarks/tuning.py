@@ -1,0 +1,217 @@
+"""Self-tuning benchmarks: does the probe->retune->reshuffle loop actually
+pay? Three head-to-head legs on the simulated cluster clock (the same
+analytic exchange model as BENCH_resilience.json), all real supervisor
+runs of the 3-level hierarchical strategy on a tiny MLP:
+
+  * static vs tuned under a DCN degradation the static leg never learns
+    about (oracle_notify=False) — the tuned leg must discover it by
+    probing and finish cheaper on simulated time;
+  * autotune on a healthy cluster — bit-exact no-op (losses AND params);
+  * straggler skew with vs without group reshuffling — the skew-sorted
+    grouping must waste strictly less inner-barrier wait.
+
+Writes BENCH_tuning.json (gated by tools/check_bench.py; consumed by
+EXPERIMENTS.md and docs/tuning.md)."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_SCRIPT = """
+import json
+import os
+import time
+import jax, jax.numpy as jnp
+import numpy as np
+
+from repro.core.executor import MacroCycleExecutor
+from repro.optim.optimizers import sgd
+from repro.optim.schedules import constant_lr
+from repro.resilience.faults import FaultPlan
+from repro.resilience.supervisor import run_with_faults
+from repro.topo import (TopologySpec, build_topology_strategy,
+                        daso_config_from)
+from repro.topo import probe
+
+from benchmarks.comm_model import ClusterModel, degraded_exchange_s
+
+QUICK = os.environ.get("BENCH_QUICK") == "1"
+OUT = os.environ.get("BENCH_TUNING_OUT", "BENCH_tuning.json")
+
+TOPO = "chip:4 x host:2@50e9 x pod:2@25e9"   # R = 4, inner host groups of 2
+spec = TopologySpec.parse(TOPO)
+R = spec.n_replicas
+per, d, h = 8, 64, 64
+n_steps = 60 if QUICK else 140
+t_compute_s = 0.120
+key = jax.random.PRNGKey(0)
+params0 = {"w1": jax.random.normal(key, (d, h)) * 0.05,
+           "w2": jax.random.normal(jax.random.fold_in(key, 1), (h, d)) * 0.05}
+wtrue = jax.random.normal(jax.random.fold_in(key, 2), (d, d))
+
+def loss_fn(params, batch):
+    hh = jnp.tanh(batch["x"] @ params["w1"])
+    return jnp.mean((hh @ params["w2"] - batch["y"]) ** 2), {}
+
+def data_fn(step):
+    k = jax.random.fold_in(key, step)
+    x = jax.random.normal(k, (R, per, d))
+    return {"x": x, "y": jnp.tanh(x @ wtrue) * 0.5}
+
+param_bytes = sum(x.size for x in jax.tree.leaves(params0)) * 4.0
+# the simulated clock prices the wire at a representative 100M-param fp32
+# payload: the tiny MLP drives the numerics, the analytic model the cost
+# (pricing the MLP's 32KB would make every exchange microsecond noise
+# next to t_compute_s and the schedule couldn't matter either way)
+priced_bytes = 4e8
+cm = ClusterModel()
+exchange_fn = lambda n, s: degraded_exchange_s(priced_bytes, n, cm,
+                                               dcn_scale=s)
+
+def strategy():
+    cfg = daso_config_from(spec, warmup_steps=n_steps // 10,
+                           cooldown_steps=n_steps // 10,
+                           total_steps=n_steps)
+    return build_topology_strategy(loss_fn, sgd(momentum=0.9), spec, cfg,
+                                   loss_window=20)
+
+def run(name, events, *, autotune_every, oracle_notify=None,
+        reshuffle=True):
+    plan = FaultPlan.from_dicts(events)
+    plan.validate(R)
+    strat = strategy()
+    ex = MacroCycleExecutor(strat)
+    t0 = time.perf_counter()
+    rep = run_with_faults(strat, params0, data_fn, constant_lr(0.1),
+                          n_steps, plan, executor=ex,
+                          t_compute_s=t_compute_s,
+                          exchange_cost_fn=exchange_fn,
+                          autotune_every=autotune_every,
+                          oracle_notify=oracle_notify,
+                          reshuffle=reshuffle)
+    wall = time.perf_counter() - t0
+    rec = {"name": name, "autotune_every": autotune_every,
+           "final_loss": rep.result.final_loss,
+           "losses": [float(x) for x in rep.result.losses],
+           "simulated_time_s": rep.simulated_time_s,
+           "wasted_wait_s": rep.wasted_wait_s,
+           "retunes": rep.retunes, "reshuffles": rep.reshuffles,
+           "invalidations": ex.stats.invalidations,
+           "final_b": strat.controller.b,
+           "inner_periods": dict(strat.controller.inner_periods),
+           "wall_s": wall}
+    results.append(rec)
+    print(f"CSV tuning_{name} {wall * 1e6:.1f} "
+          f"sim_time={rep.simulated_time_s:.1f}s "
+          f"final_loss={rep.result.final_loss:.4f} "
+          f"retunes={len(rep.retunes)} reshuffles={rep.reshuffles}")
+    return rec, rep.result
+
+results = []
+
+# -- leg 1: DCN degrades mid-run; static never learns, tuned probes -----
+degrade_step = n_steps // 4
+dcn_events = [{"step": degrade_step, "kind": "degrade_dcn", "factor": 0.25}]
+static, _ = run("static_degraded", dcn_events, autotune_every=0,
+                oracle_notify=False)
+tuned, _ = run("tuned_degraded", dcn_events, autotune_every=2)
+
+sched = [r for r in tuned["retunes"] if r["schedule_changed"]]
+assert sched, "tuned leg never retuned"
+# adapt latency in cycles: probes run every cycle, so the gap between the
+# first post-degrade cycle index and the first schedule-changing one
+post = [r["cycle"] for r in tuned["retunes"] if r["step"] >= degrade_step]
+adapt_cycles = sched[0]["cycle"] - min(post) if post else 99
+
+# -- leg 2: healthy cluster; autotune must be a bit-exact no-op ---------
+off, res_off = run("noop_autotune_off", [], autotune_every=0)
+on, res_on = run("noop_autotune_on", [], autotune_every=1)
+noop_param_delta = max(
+    float(np.max(np.abs(np.asarray(a, np.float32)
+                        - np.asarray(b, np.float32))))
+    for a, b in zip(jax.tree.leaves(res_off.params),
+                    jax.tree.leaves(res_on.params)))
+noop_loss_delta = float(np.max(np.abs(
+    np.asarray(off["losses"], np.float32)
+    - np.asarray(on["losses"], np.float32))))
+
+# -- leg 3: straggler skew; reshuffle on vs off -------------------------
+straggle_events = [
+    {"step": n_steps // 8, "kind": "straggle", "replica": 1, "factor": 3.0},
+    {"step": n_steps // 8, "kind": "straggle", "replica": 3, "factor": 3.0},
+]
+no_shuf, _ = run("straggler_static_groups", straggle_events,
+                 autotune_every=1, reshuffle=False)
+shuf, _ = run("straggler_reshuffled", straggle_events, autotune_every=1)
+
+# -- probe microbench: one active probe round on this host --------------
+t0 = time.perf_counter()
+pr = probe.active_probe(spec, rounds=3)
+probe_wall = time.perf_counter() - t0
+retuned = probe.derive_retuned_periods(spec, pr.costs,
+                                       param_bytes=pr.param_bytes)
+print(f"CSV tuning_active_probe {probe_wall * 1e6:.1f} "
+      f"levels={len(pr.costs)} retuned={retuned}")
+results.append({"name": "active_probe", "wall_s": probe_wall,
+                "costs_us": {k: v * 1e6 for k, v in pr.costs.items()},
+                "retuned_periods": retuned})
+
+derived = {
+    # the headline: discovering the degradation beats never learning of it
+    "tuned_vs_static_sim_time_ratio":
+        tuned["simulated_time_s"] / static["simulated_time_s"],
+    "adapt_cycles": float(adapt_cycles),
+    "retune_events": float(len(sched)),
+    "tuned_final_b": float(tuned["final_b"]),
+    "static_final_b": float(static["final_b"]),
+    "loss_delta_tuned_vs_static":
+        tuned["final_loss"] - static["final_loss"],
+    # autotune on a healthy cluster changes NOTHING
+    "noop_retune_param_delta": noop_param_delta,
+    "noop_retune_loss_delta": noop_loss_delta,
+    # skew-sorted groups waste less inner-barrier wait
+    "reshuffle_wait_ratio":
+        shuf["wasted_wait_s"] / max(no_shuf["wasted_wait_s"], 1e-12),
+    "reshuffles": float(shuf["reshuffles"]),
+}
+for r in results:
+    r.pop("losses", None)   # keep the record small
+record = {"benchmark": "tuning",
+          "config": {"topology": TOPO, "n_replicas": R, "n_steps": n_steps,
+                     "n_params": int(param_bytes // 4), "quick": QUICK,
+                     "t_compute_s": t_compute_s,
+                     "degrade_step": degrade_step, "dcn_factor": 0.25},
+          "results": results, "derived": derived}
+with open(OUT, "w") as f:
+    json.dump(record, f, indent=2)
+print(f"CSV tuning_headline {0.0:.1f} "
+      f"sim_ratio={derived['tuned_vs_static_sim_time_ratio']:.3f} "
+      f"adapt_cycles={adapt_cycles} "
+      f"wait_ratio={derived['reshuffle_wait_ratio']:.3f} json={OUT}")
+"""
+
+
+def emit_rows(emit, *, quick=False):
+    """Static-vs-tuned DCN degradation, bit-exact no-op check, and
+    reshuffle wait accounting on a single device (the supervisor's
+    simulated clock is device-count independent). Writes the perf record
+    to $BENCH_TUNING_OUT (default ./BENCH_tuning.json)."""
+    repo = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (SRC + os.pathsep + repo
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env["BENCH_QUICK"] = "1" if quick else "0"
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(_SCRIPT)],
+                       capture_output=True, text=True, timeout=1200,
+                       env=env)
+    if r.returncode != 0:
+        emit("tuning_microbench_FAILED", 0.0, r.stderr[-200:])
+        return
+    for line in r.stdout.splitlines():
+        if line.startswith("CSV "):
+            _, name, us, derived = line.split(" ", 3)
+            emit(name, float(us), derived)

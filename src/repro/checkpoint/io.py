@@ -43,7 +43,13 @@ from repro.core.flatbuf import host_fetchable
 # v2: records the strategy's overlap mode ("off" | "one_cycle") — an
 # overlap carry has a fourth (pending-snapshot) slot, and resuming it
 # into a non-overlap run (or vice versa) would mis-thread the buffers.
-TRAIN_STATE_VERSION = 2
+# v3: the controller dict carries the EFFECTIVE per-level periods
+# (HierDasoController.state_dict "inner_periods") — online retuning
+# (topo/probe) makes them mutable state, and a run checkpointed
+# mid-retune must resume with the tuned schedule, not re-lower the
+# spec's static annotations. A v2 checkpoint lacks the key and loads
+# as static (the periods the controller was built with stand).
+TRAIN_STATE_VERSION = 3
 
 
 def _flatten(tree, prefix=""):

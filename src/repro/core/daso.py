@@ -311,9 +311,43 @@ def _arena_group_mean(arena, group_size: int, mask=None,
         arena.shape)
 
 
+def normalize_group_perm(perm, n_replicas: int):
+    """Validate and canonicalize a replica regrouping permutation: a tuple
+    permutation of ``range(n_replicas)`` mapping *group slot* -> *replica
+    index* (slot i holds replica perm[i], so consecutive slots share an
+    inner group). The identity normalizes to None — the unpermuted HLO —
+    so callers can compare against the fast path cheaply."""
+    if perm is None:
+        return None
+    perm = tuple(int(i) for i in perm)
+    if sorted(perm) != list(range(n_replicas)):
+        raise ValueError(f"group permutation {perm!r} is not a permutation "
+                         f"of range({n_replicas})")
+    return None if perm == tuple(range(n_replicas)) else perm
+
+
+def _permuted_group_mean(arena, group_size: int, mask, deterministic: bool,
+                         perm):
+    """`_arena_group_mean` under a replica regrouping: gather the rows into
+    slot order, group-mean contiguous slots, scatter back to replica order.
+    `perm` is static, so the gathers compile to fixed-index slices that XLA
+    fuses into the reduction; mask weights travel with their rows. A
+    whole-world group is permutation-invariant, so it skips the gathers."""
+    if perm is None or group_size == arena.shape[0]:
+        return _arena_group_mean(arena, group_size, mask, deterministic)
+    idx = jnp.asarray(perm, dtype=jnp.int32)
+    inv = [0] * len(perm)
+    for slot, rep in enumerate(perm):
+        inv[rep] = slot
+    pmask = None if mask is None else tuple(mask[i] for i in perm)
+    gm = _arena_group_mean(jnp.take(arena, idx, axis=0), group_size,
+                           pmask, deterministic)
+    return jnp.take(gm, jnp.asarray(inv, dtype=jnp.int32), axis=0)
+
+
 def level_group_mean(tree, group_size: int, *, wire_format: str = "f32",
                      use_kernels: bool = False, mask=None,
-                     deterministic: bool = False):
+                     deterministic: bool = False, perm=None):
     """Synchronous parameter average over contiguous replica groups of
     `group_size` — the sync primitive of one intermediate topology level
     (repro/topo: group_size = prod of replica-level fanouts up to the
@@ -324,24 +358,33 @@ def level_group_mean(tree, group_size: int, *, wire_format: str = "f32",
     regardless of leaf count. `wire_format` selects the tier-l transfer
     dtype ("f32" default — intermediate links are fast; "bf16" for the
     paper-style 16-bit packaging; int8 is outermost-only). `group_size ==
-    R` degenerates to the full replica mean (= `replica_mean`)."""
+    R` degenerates to the full replica mean (= `replica_mean`).
+
+    `perm` (see `normalize_group_perm`) regroups the replicas before the
+    mean: slot order replaces replica order, so which replicas share a
+    group becomes a static schedule choice — the straggler-aware
+    reshuffle knob (repro.topo.probe.skew_permutation). Every group mean
+    preserves its group's sum and the groups partition the rows, so the
+    exact global mean is invariant under ANY permutation
+    (tests/test_tuning.py pins this as a hypothesis property)."""
     if wire_format not in ("f32", "bf16"):
         raise ValueError("level_group_mean supports wire_format 'f32' | "
                          f"'bf16', got {wire_format!r} (the int8 tier is "
                          "for the outermost exchange)")
     layout = flatbuf.build_layout(tree, batch_dims=1)
     arenas = flatbuf.pack(tree, layout)
+    perm = normalize_group_perm(perm, layout.batch_shape[0])
     out = {}
     for k, a in arenas.items():
         if not jnp.issubdtype(a.dtype, jnp.floating):
             w = a.astype(jnp.float32)
-            out[k] = jnp.round(_arena_group_mean(
-                w, group_size, mask, deterministic)).astype(a.dtype)
+            out[k] = jnp.round(_permuted_group_mean(
+                w, group_size, mask, deterministic, perm)).astype(a.dtype)
             continue
         w = (flatbuf.encode_wire(a, "bf16", use_kernels=use_kernels)
              if wire_format == "bf16" else a)
-        out[k] = _arena_group_mean(w, group_size, mask,
-                                   deterministic).astype(a.dtype)
+        out[k] = _permuted_group_mean(w, group_size, mask,
+                                      deterministic, perm).astype(a.dtype)
     return flatbuf.unpack(out, layout)
 
 
@@ -569,7 +612,8 @@ def daso_train_step(loss_fn: Callable, optimizer: Optimizer, cfg: DasoConfig,
                     *, mode: str, staleness: int = 1,
                     spmd_axis_name: Optional[str] = None, n_micro: int = 1,
                     membership=None,
-                    inner_syncs: Tuple[Tuple[str, int], ...] = ()):
+                    inner_syncs: Tuple[Tuple[str, int], ...] = (),
+                    group_perm=None):
     """Build one statically-specialized DASO step function.
 
     step(params_R, opt_R, inflight, batch_R, lr)
@@ -593,7 +637,12 @@ def daso_train_step(loss_fn: Callable, optimizer: Optimizer, cfg: DasoConfig,
     mask is a *static* constant — a membership change compiles new step
     variants (the executor invalidates its cycle cache, see
     resilience/supervisor.py), which keeps the fixed-membership HLO
-    bit-identical to the non-elastic build."""
+    bit-identical to the non-elastic build.
+
+    `group_perm` (normalize_group_perm) statically regroups the replicas
+    for every inner-level sync — the straggler-aware reshuffle. Like the
+    membership mask it is baked into the compiled step; changing it means
+    new variants (DasoStrategy.set_group_permutation)."""
     assert mode in MODES, mode
     lstep = local_step(loss_fn, optimizer, spmd_axis_name=spmd_axis_name,
                        n_micro=n_micro)
@@ -601,6 +650,7 @@ def daso_train_step(loss_fn: Callable, optimizer: Optimizer, cfg: DasoConfig,
     impl, kern, blk = (cfg.exchange_impl, cfg.exchange_kernels,
                        cfg.int8_block)
     det = cfg.deterministic_reduce
+    perm = normalize_group_perm(group_perm, cfg.n_replicas)
     mask = flatbuf.normalize_membership(membership, cfg.n_replicas)
     n_active = cfg.n_replicas if mask is None else int(sum(mask))
     p_eff = (cfg.global_world if mask is None
@@ -624,7 +674,7 @@ def daso_train_step(loss_fn: Callable, optimizer: Optimizer, cfg: DasoConfig,
         for _name, g in inner_syncs:
             params = freeze_inactive(
                 level_group_mean(params, g, use_kernels=kern, mask=mask,
-                                 deterministic=det),
+                                 deterministic=det, perm=perm),
                 params, mask)
         if mode in ("send", "send_receive"):
             inflight = global_send(
@@ -662,7 +712,8 @@ def daso_overlap_step(loss_fn: Callable, optimizer: Optimizer,
                       extra_staleness: int = 0,
                       spmd_axis_name: Optional[str] = None, n_micro: int = 1,
                       membership=None,
-                      inner_syncs: Tuple[Tuple[str, int], ...] = ()):
+                      inner_syncs: Tuple[Tuple[str, int], ...] = (),
+                      group_perm=None):
     """Build one step variant of the double-buffered overlap schedule
     (DasoConfig.overlap == "one_cycle"). The carry grows a fourth slot —
     the `pending` snapshot arena awaiting its exchange:
@@ -698,6 +749,7 @@ def daso_overlap_step(loss_fn: Callable, optimizer: Optimizer,
     impl, kern, blk = (cfg.exchange_impl, cfg.exchange_kernels,
                        cfg.int8_block)
     det = cfg.deterministic_reduce
+    perm = normalize_group_perm(group_perm, cfg.n_replicas)
     mask = flatbuf.normalize_membership(membership, cfg.n_replicas)
     n_active = cfg.n_replicas if mask is None else int(sum(mask))
     p_eff = (cfg.global_world if mask is None
@@ -716,7 +768,7 @@ def daso_overlap_step(loss_fn: Callable, optimizer: Optimizer,
         for _name, g in inner_syncs:
             params = freeze_inactive(
                 level_group_mean(params, g, use_kernels=kern, mask=mask,
-                                 deterministic=det),
+                                 deterministic=det, perm=perm),
                 params, mask)
         if mode == "ov_start":
             pending = params
@@ -755,7 +807,8 @@ def daso_overlap_compute_step(loss_fn: Callable, optimizer: Optimizer,
                               spmd_axis_name: Optional[str] = None,
                               n_micro: int = 1, membership=None,
                               inner_syncs: Tuple[Tuple[str, int],
-                                                 ...] = ()):
+                                                 ...] = (),
+                              group_perm=None):
     """The compute-program half of one overlap-dispatched macro-cycle:
 
     step(params_R, opt_R, batch_R, lr) -> (params_R, opt_R, metrics)
@@ -778,6 +831,7 @@ def daso_overlap_compute_step(loss_fn: Callable, optimizer: Optimizer,
                        n_micro=n_micro)
     kern = cfg.exchange_kernels
     det = cfg.deterministic_reduce
+    perm = normalize_group_perm(group_perm, cfg.n_replicas)
     mask = flatbuf.normalize_membership(membership, cfg.n_replicas)
 
     def step(params, opt_state, batch, lr):
@@ -789,7 +843,7 @@ def daso_overlap_compute_step(loss_fn: Callable, optimizer: Optimizer,
         for _name, g in inner_syncs:
             params = freeze_inactive(
                 level_group_mean(params, g, use_kernels=kern, mask=mask,
-                                 deterministic=det),
+                                 deterministic=det, perm=perm),
                 params, mask)
         return params, opt_state, {"loss_per_replica": loss_r}
 

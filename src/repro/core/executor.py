@@ -47,7 +47,8 @@ from repro.core import flatbuf
 from repro.core.daso import (DasoConfig, _cross_replica_loss,
                              daso_overlap_compute_step, daso_overlap_step,
                              daso_train_step, dereplicate_params,
-                             global_receive, global_send, replica_divergence,
+                             global_receive, global_send,
+                             normalize_group_perm, replica_divergence,
                              replicate_params, sync_train_step)
 from repro.core.schedule import (DasoController, Mode, is_ov_mode, join_mode,
                                  split_mode, split_ov)
@@ -212,6 +213,7 @@ class DasoStrategy(Strategy):
         super().__init__(loss_fn, optimizer, cfg, **kw)
         self._membership = flatbuf.normalize_membership(
             membership, cfg.n_replicas)
+        self._group_perm = None
 
     # -- elastic membership ------------------------------------------------
     @property
@@ -235,6 +237,27 @@ class DasoStrategy(Strategy):
         the right trade."""
         self._membership = flatbuf.normalize_membership(
             mask, self.cfg.n_replicas)
+        self._steps.clear()
+
+    # -- straggler-aware reshuffle -----------------------------------------
+    @property
+    def group_perm(self):
+        """Replica regrouping permutation for inner-level syncs (None =
+        contiguous identity grouping, the non-reshuffled fast path)."""
+        return self._group_perm
+
+    def set_group_permutation(self, perm) -> None:
+        """Rotate which replicas share an inner group: slot i of the new
+        grouping holds replica `perm[i]` (repro.core.daso.
+        normalize_group_perm). Same contract as `set_membership` — the
+        permutation is baked statically into every step variant, so this
+        drops the step-fn cache and the caller must `invalidate()` any
+        executor holding compiled cycles over the old variants (the
+        resilience supervisor's autotune path does both). Driven by
+        per-replica cycle-time skew: `repro.topo.probe.skew_permutation`
+        packs similar-speed replicas into the same group so a straggler
+        delays only its own group's inner syncs."""
+        self._group_perm = normalize_group_perm(perm, self.cfg.n_replicas)
         self._steps.clear()
 
     @property
@@ -284,7 +307,8 @@ class DasoStrategy(Strategy):
                                mode=outer, staleness=staleness,
                                n_micro=self.n_micro,
                                membership=self._membership,
-                               inner_syncs=self._inner_syncs_of(inner))
+                               inner_syncs=self._inner_syncs_of(inner),
+                               group_perm=self._group_perm)
 
     def _build_raw_overlap(self, mode, staleness):
         """Overlap counterpart of `_build_raw`: 4-slot carry, OV_* tokens,
@@ -296,7 +320,8 @@ class DasoStrategy(Strategy):
                                  extra_staleness=extra,
                                  n_micro=self.n_micro,
                                  membership=self._membership,
-                                 inner_syncs=self._inner_syncs_of(inner))
+                                 inner_syncs=self._inner_syncs_of(inner),
+                                 group_perm=self._group_perm)
 
     def build_step(self, mode, staleness):
         if mode.startswith(OVERLAP_COMPUTE_PREFIX):
@@ -306,7 +331,8 @@ class DasoStrategy(Strategy):
             raw = daso_overlap_compute_step(
                 self.loss_fn, self.optimizer, self.cfg,
                 n_micro=self.n_micro, membership=self._membership,
-                inner_syncs=self._inner_syncs_of(inner))
+                inner_syncs=self._inner_syncs_of(inner),
+                group_perm=self._group_perm)
 
             def cstep(carry, batch, lr):
                 params, opt_state = carry

@@ -340,6 +340,37 @@ class DasoController:
         self._trace("dcn_scale", reason=reason, step=step, scale=scale,
                     b_from=b0, b_to=self._b)
 
+    def retune(self, level_costs: Dict[str, float], *,
+               annotated: Optional[Dict[str, float]] = None,
+               step: int = -1, rel_tol: float = 0.05) -> bool:
+        """Feed one round of *measured* per-level sync costs (seconds per
+        sync, key ``"_outer"`` for the outermost level — the dict shape
+        `repro.topo.probe` produces) back into the schedule. The base
+        controller owns only the outermost level: when `annotated` carries
+        the nominal ``"_outer"`` cost, the measured/annotated ratio is the
+        *effective* DCN scale (a link at half bandwidth measures 2x the
+        cost), and a scale that drifts past `rel_tol` of the currently
+        assumed one is applied through the `notify_dcn_scale` stretch rule.
+
+        Measurements matching the annotations are a strict no-op: no state
+        change, no event, no trace — the bit-exactness contract
+        tests/test_tuning.py pins. Returns True iff the schedule changed
+        (the caller then invalidates its executor, same as a membership
+        change)."""
+        t_meas = level_costs.get("_outer")
+        t_nom = (annotated or {}).get("_outer")
+        if not t_meas or not t_nom or t_meas <= 0 or t_nom <= 0:
+            return False
+        scale = t_nom / t_meas
+        if abs(scale - self._dcn_scale) <= rel_tol * self._dcn_scale:
+            return False
+        b0, w0 = self._b, self._w
+        self.notify_dcn_scale(scale, step=step)
+        self.events.append((step, "retune", float(scale)))
+        self._trace("retune", step=step, scale=scale, b_from=b0,
+                    b_to=self._b, bw_changed=(self._b, self._w) != (b0, w0))
+        return True
+
     # -- checkpoint state --------------------------------------------------
     _STATE_FIELDS = ("_b", "_w", "_last_send", "_inflight_since",
                      "_recv_staleness", "_ov_last", "_best",
@@ -422,8 +453,13 @@ class HierDasoController(DasoController):
     B/W, non-blocking send/receive, Eq. (1) staleness merge — via the
     inherited `DasoController` logic. With no intermediate levels (a
     2-level topology) this class is behaviorally identical to its base:
-    same mode strings, same history, same cycle shapes."""
+    same mode strings, same history, same cycle shapes.
+
+    `pinned_periods` names the levels whose period came from an explicit
+    ``%period`` pin in the spec — `retune` never moves those (an operator
+    pin outranks a measurement, same precedence as at lowering time)."""
     inner_periods: Dict[str, int] = field(default_factory=dict)
+    pinned_periods: Tuple[str, ...] = ()
 
     def __post_init__(self):
         super().__post_init__()
@@ -453,3 +489,65 @@ class HierDasoController(DasoController):
         s, _, b, w = self.history[-1]
         self.history[-1] = (s, mode, b, w)
         return mode, stale
+
+    def retune(self, level_costs: Dict[str, float], *,
+               annotated: Optional[Dict[str, float]] = None,
+               step: int = -1, rel_tol: float = 0.05) -> bool:
+        """N-level retune: the base class handles the outermost level
+        (effective-DCN-scale inference), then every *measured* intermediate
+        level gets its period re-derived from the cost ratio
+
+            B_l = clamp(round(b_max * t_l / t_outer), 1, b_max)
+
+        — the lowering rule of `repro.topo.lower.derive_inner_periods` with
+        measured seconds standing in for annotated bandwidths (bandwidth is
+        bytes over time, so the ratios are the same quantity). ``%period``
+        -pinned levels and levels absent from `level_costs` keep their
+        current period. Probing with costs that match the annotations
+        therefore reproduces the statically lowered schedule exactly — the
+        no-op invariant. Returns True iff anything changed; the caller must
+        then drop compiled cycles (`MacroCycleExecutor.invalidate`) exactly
+        as after a membership change, since the new periods change the
+        cycle shapes the planner emits."""
+        changed = super().retune(level_costs, annotated=annotated,
+                                 step=step, rel_tol=rel_tol)
+        t_outer = level_costs.get("_outer")
+        if not t_outer or t_outer <= 0:
+            return changed
+        b_max = max(1, self.cfg.b_max)
+        new = dict(self.inner_periods)
+        for name in self.inner_periods:
+            t_l = level_costs.get(name)
+            if name in self.pinned_periods or not t_l or t_l <= 0:
+                continue
+            new[name] = max(1, min(b_max, round(b_max * t_l / t_outer)))
+        if new != self.inner_periods:
+            old = dict(self.inner_periods)
+            self.inner_periods = new
+            self.events.append(
+                (step, "retune_periods",
+                 float(sum(1 for n in new if new[n] != old[n]))))
+            self._trace("retune", step=step, periods_from=old,
+                        periods_to=dict(new), bw_changed=False)
+            changed = True
+        return changed
+
+    # -- checkpoint state --------------------------------------------------
+    def state_dict(self) -> dict:
+        """Base state plus the *effective* per-level periods. Online
+        retuning makes `inner_periods` mutable state: a run checkpointed
+        mid-retune must resume with the tuned periods, not re-lower the
+        spec's static annotations (checkpoint/io.py TRAIN_STATE_VERSION 3;
+        v2 checkpoints lack the key and load as static — see
+        `load_state_dict`)."""
+        sd = super().state_dict()
+        sd["inner_periods"] = dict(self.inner_periods)
+        return sd
+
+    def load_state_dict(self, sd: dict) -> None:
+        super().load_state_dict(sd)
+        # v2 (pre-retune) checkpoints carry no inner_periods: keep the
+        # statically lowered defaults this controller was built with
+        if "inner_periods" in sd:
+            self.inner_periods = {str(k): int(v)
+                                  for k, v in sd["inner_periods"].items()}

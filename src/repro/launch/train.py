@@ -134,6 +134,20 @@ def main():
                          "rejoin/straggle/degrade_dcn events) through the "
                          "resilience supervisor; daso-family strategies "
                          "only")
+    ap.add_argument("--autotune", action="store_true",
+                    help="self-tuning topology (docs/tuning.md): probe the "
+                         "live mesh's per-level sync cost and retune the "
+                         "lowered schedule online (controller.retune — "
+                         "periods re-derived from measurements, effective "
+                         "DCN scale inferred). Plain runs probe once at "
+                         "startup; --fault-plan runs re-probe every "
+                         "--autotune-every cycles and reshuffle inner "
+                         "groups by straggler skew. Measurements matching "
+                         "the spec's annotations are a strict no-op")
+    ap.add_argument("--autotune-every", type=int, default=8, metavar="K",
+                    help="probe cadence in macro-cycles for --autotune "
+                         "under --fault-plan (default 8; the adapt-within-K "
+                         "bound BENCH_tuning.json gates)")
     ap.add_argument("--metrics-out", default=None)
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a JSONL run trace (obs/trace.py): spans "
@@ -279,7 +293,8 @@ def main():
         overlap=args.overlap,
         overlap_serial_exchange=args.overlap_serial_exchange,
         ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt,
-        resume_from=args.resume, distributed=args.distributed)
+        resume_from=args.resume, distributed=args.distributed,
+        autotune=args.autotune, autotune_every=args.autotune_every)
     lr_fn = warmup_linear_scaled(args.lr / (R * args.local_world),
                                  R * args.local_world,
                                  max(1, args.steps // 10))
@@ -416,13 +431,19 @@ def main():
                                  ckpt_cb=ckpt_cb, placement=placement,
                                  start_step=start_step, carry=carry,
                                  membership=membership, health=health,
-                                 tracer=tracer)
+                                 tracer=tracer,
+                                 autotune_every=(args.autotune_every
+                                                 if args.autotune else 0))
         result = report.result
         if prior_losses:
             result.losses = prior_losses + result.losses
         say(f"[train] fault plan: {len(plan.events)} events, "
             f"{report.invalidations} cycle-cache invalidations, "
             f"simulated_time={report.simulated_time_s:.2f}s")
+        for rt in report.retunes:
+            say(f"[train]   step {rt['step']:>5} retune       "
+                f"cycle={rt['cycle']} changed={rt['schedule_changed']} "
+                f"reshuffled={rt['reshuffled']}")
         for ev in report.applied:
             say(f"[train]   step {ev['step']:>5} {ev['kind']:<12} "
                 f"replica={ev.get('replica')} "
@@ -470,7 +491,10 @@ def main():
             metrics["resilience"] = {
                 "events": report.applied,
                 "invalidations": report.invalidations,
-                "simulated_time_s": report.simulated_time_s}
+                "simulated_time_s": report.simulated_time_s,
+                "retunes": report.retunes,
+                "reshuffles": report.reshuffles,
+                "wasted_wait_s": report.wasted_wait_s}
             if live_meta is not None:
                 metrics["resilience"]["live"] = live_meta
         if comm_rows is not None:

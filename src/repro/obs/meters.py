@@ -49,8 +49,11 @@ class LevelMeter:
     exchange at this level — the quantity a ring/tree all-reduce moves
     ~2x of per member, and the number the HLO cross-check compares
     against operand bytes. `measured_sync_s` is filled in from the trace
-    by tools/trace_report.py (or live by a future self-tuning controller);
-    until then it is None and `implied_gbps` has nothing to divide."""
+    by tools/trace_report.py, or live by the self-tuning loop — filled
+    rows are exactly the passive-probe samples
+    `repro.topo.probe.fit_level_costs` fits a retune from
+    (`level_cost_samples` below does the conversion); unfilled it is None
+    and `implied_gbps` has nothing to divide."""
     level: str                     # "_outer" or an inner level name
     syncs: int                     # exchanges at this level in the window
     wire_format: str               # tier the payload crossed at
@@ -140,6 +143,22 @@ def level_bytes_report(params, counts: Dict[str, int], cfg, *,
             rows.append(LevelMeter(name, n, inner_wire, 0,
                                    payload(inner_wire)))
     return rows
+
+
+def level_cost_samples(rows: Sequence[LevelMeter]) -> List[tuple]:
+    """Convert meter rows with a measured sync time into the
+    ``(level, seconds)`` sample pairs `repro.topo.probe.fit_level_costs`
+    consumes — the passive-probe path: trace_report fills
+    `measured_sync_s` from tracer sync spans, this turns the filled rows
+    into retune input. Rows without a measurement are skipped.
+
+    >>> rows = [LevelMeter("host", 4, "f32", 2, 100, measured_sync_s=2e-3),
+    ...         LevelMeter("_outer", 1, "bf16", 4, 50)]
+    >>> level_cost_samples(rows)
+    [('host', 0.002)]
+    """
+    return [(r.level, float(r.measured_sync_s)) for r in rows
+            if r.measured_sync_s is not None and r.measured_sync_s > 0]
 
 
 def rows_as_counter(rows: Sequence[LevelMeter]) -> Dict[str, float]:

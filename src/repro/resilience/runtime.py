@@ -203,6 +203,47 @@ def read_heartbeat(run_dir: str, epoch: int, proc_id: int) -> Optional[dict]:
         return None
 
 
+def snapshot_heartbeats(run_dir: str, epoch: int, n_procs: int) -> dict:
+    """One fleet-wide heartbeat snapshot: proc id -> latest beat document
+    (processes that have not beaten yet are omitted)."""
+    out = {}
+    for p in range(n_procs):
+        doc = read_heartbeat(run_dir, epoch, p)
+        if doc is not None:
+            out[p] = doc
+    return out
+
+
+def heartbeat_skew(before: dict, after: dict, *,
+                   min_dt_s: float = 0.0) -> dict:
+    """Per-process relative slowdown from two heartbeat snapshots
+    (`snapshot_heartbeats` taken a probe interval apart): each process's
+    step-progress rate between the snapshots, normalized so the fastest
+    process reads 1.0 — a process advancing at half the fastest rate reads
+    2.0, the same unit as the fault plan's straggle factors. Processes
+    without usable progress in both snapshots are omitted.
+
+    This is the live-runtime skew source for the straggler-aware group
+    reshuffle: the launcher maps process ids to the replicas they own and
+    hands the slowdown vector to `repro.topo.probe.skew_permutation`
+    (simulated runs use the fault plan's injected slowdowns directly —
+    resilience/supervisor.py)."""
+    rates = {}
+    for p, b in before.items():
+        a = after.get(p)
+        if a is None:
+            continue
+        dt = float(a["t"]) - float(b["t"])
+        ds = int(a["step"]) - int(b["step"])
+        if dt <= min_dt_s or ds <= 0:
+            continue
+        rates[p] = ds / dt
+    if not rates:
+        return {}
+    fastest = max(rates.values())
+    return {p: fastest / r for p, r in rates.items()}
+
+
 #: heartbeat wire format: required key -> type check. This IS the schema —
 #: the launcher's kill/supervise triggers key off `phase`/`step`, and the
 #: trace streams are written next to these files, so the two planes share

@@ -35,6 +35,7 @@ from repro.core.schedule import Mode, split_mode, split_ov
 from repro.core.simulator import SimResult
 from repro.resilience.faults import FaultPlan
 from repro.resilience.membership import reseed_carry
+from repro.topo import probe as probe_mod
 
 # outermost-level actions that touch the cross-pod network (charged an
 # exchange on the simulated clock; hierarchical mode tokens are split to
@@ -51,6 +52,13 @@ class ResilienceReport:
     invalidations: int = 0
     simulated_time_s: float = 0.0
     membership_timeline: List = field(default_factory=list)  # (step, mask)
+    # autotune plane (run_with_faults autotune_every > 0): one record per
+    # probe round that changed the schedule, count of group reshuffles,
+    # and the accumulated straggler wait an inner-group barrier wasted on
+    # the simulated clock (repro.topo.probe.wasted_wait_s)
+    retunes: List[Dict] = field(default_factory=list)
+    reshuffles: int = 0
+    wasted_wait_s: float = 0.0
 
     def recovery_s(self) -> List[float]:
         """Per membership event: host handling + first post-event cycle
@@ -70,7 +78,10 @@ def run_with_faults(strategy: Strategy, params0, data_fn: Callable,
                     placement=None,
                     start_step: int = 0, carry=None,
                     membership=None,
-                    health=None, tracer=None) -> ResilienceReport:
+                    health=None, tracer=None,
+                    autotune_every: int = 0,
+                    oracle_notify: Optional[bool] = None,
+                    reshuffle: bool = True) -> ResilienceReport:
     """Run `n_steps` of compiled training while replaying `plan`.
 
     `strategy` must be a replica-axis strategy (daso / hier_daso /
@@ -97,7 +108,23 @@ def run_with_faults(strategy: Strategy, params0, data_fn: Callable,
     before `start_step` are rejected: anything already in the past is
     either reflected in the checkpoint's membership or meaningless to
     replay. `health` (resilience.runtime.HealthMonitor) arms the progress
-    watchdog around every dispatched cycle."""
+    watchdog around every dispatched cycle.
+
+    **Self-tuning** (`autotune_every` = K > 0, docs/tuning.md): every K
+    cycles the supervisor probes one exchange at the current network state
+    (`exchange_cost_fn(n_active, dcn_scale)` — charged to the simulated
+    clock: probing is not free), compares it against the nominal cost
+    (`dcn_scale == 1`), and feeds the result through
+    `controller.retune(...)`; a schedule change invalidates the executor's
+    compiled cycles, exactly the membership machinery. With `reshuffle`
+    on, the same probe round sorts the per-replica slowdowns into a
+    `repro.topo.probe.skew_permutation` regrouping and applies it via
+    `strategy.set_group_permutation`. `oracle_notify` controls whether the
+    degrade_dcn/restore_dcn fault events tell the controller directly (the
+    pre-autotune oracle behavior); it defaults to True only when autotune
+    is off — a self-tuning run must *discover* the degradation by probing,
+    and a static-baseline run (`oracle_notify=False`, autotune off) never
+    learns of it at all (the honest comparison BENCH_tuning.json gates)."""
     cfg = strategy.cfg
     if cfg is None:
         raise ValueError("run_with_faults needs a replica-axis strategy "
@@ -123,6 +150,10 @@ def run_with_faults(strategy: Strategy, params0, data_fn: Callable,
         ex.health = health
     if tracer is not None and not ex.tracer.enabled:
         ex.tracer = tracer
+    if (strategy.controller is not None and ex.tracer.enabled
+            and getattr(strategy.controller, "tracer", None) is None):
+        # schedule decisions (plateau, dcn, retune) land in the same trace
+        strategy.controller.tracer = ex.tracer
     if membership is not None and any(m <= 0.0 for m in mask):
         # the checkpoint was taken under a reduced active set: rebuild the
         # step variants with its mask baked in before anything compiles
@@ -132,6 +163,23 @@ def run_with_faults(strategy: Strategy, params0, data_fn: Callable,
         carry = placement.put_carry(carry)
     slowdowns = [1.0] * n_replicas
     dcn_scale = 1.0
+    if oracle_notify is None:
+        oracle_notify = autotune_every <= 0
+    # probe pricing: the exchange cost model doubles as the probe's
+    # measurement (one timed exchange at the live network state); without
+    # a cost model the probe still observes the *normalized* cost 1/scale
+    # vs nominal 1 — same inferred scale, zero simulated price
+    probe_cost = (exchange_cost_fn if exchange_cost_fn is not None
+                  else (lambda n, s: 1.0 / max(s, 1e-9)))
+    # innermost non-degenerate inner-group size, for the wasted-wait
+    # accounting of the inner barrier (no inner levels -> the only barrier
+    # is the global one and reshuffling has nothing to recover)
+    inner_group = n_replicas
+    if topo is not None:
+        sizes = [topo.group_size(lvl.name) for lvl in topo.levels[1:-1]
+                 if topo.group_size(lvl.name) > 1]
+        if sizes:
+            inner_group = min(sizes)
 
     report = ResilienceReport(result=None)
     report.membership_timeline.append((start_step, tuple(mask)))
@@ -180,16 +228,50 @@ def run_with_faults(strategy: Strategy, params0, data_fn: Callable,
             slowdowns[ev.replica] = 1.0
         elif ev.kind == "degrade_dcn":
             dcn_scale = ev.factor
-            if strategy.controller is not None:
+            if oracle_notify and strategy.controller is not None:
                 strategy.controller.notify_dcn_scale(ev.factor, step=step)
         elif ev.kind == "restore_dcn":
             dcn_scale = 1.0
-            if strategy.controller is not None:
+            if oracle_notify and strategy.controller is not None:
                 strategy.controller.notify_dcn_scale(1.0, step=step)
         rec["handle_s"] = time.perf_counter() - t0
         report.applied.append(rec)
 
+    def autotune(step, cycle_idx):
+        """One probe round: measure the exchange at the live network state,
+        retune the controller against the nominal cost, reshuffle groups by
+        straggler skew. Returns the probe's simulated price."""
+        nonlocal sim_time
+        ctl = strategy.controller
+        if ctl is None or not hasattr(ctl, "retune"):
+            return
+        n_active = int(sum(1 for m in mask if m > 0.0))
+        measured = probe_cost(n_active, dcn_scale)
+        nominal = probe_cost(n_active, 1.0)
+        if exchange_cost_fn is not None:
+            sim_time += measured  # the probe's own exchange is not free
+        with ex.tracer.span("autotune_probe", cat="resilience", step=step,
+                            cycle=cycle_idx, measured_s=measured,
+                            nominal_s=nominal):
+            changed = ctl.retune({"_outer": measured},
+                                 annotated={"_outer": nominal}, step=step)
+            reshuffled = False
+            if reshuffle and hasattr(strategy, "set_group_permutation") \
+                    and inner_group < n_replicas:
+                perm = probe_mod.skew_permutation(slowdowns)
+                if perm != strategy.group_perm:
+                    strategy.set_group_permutation(perm)
+                    reshuffled = True
+                    report.reshuffles += 1
+        if changed or reshuffled:
+            ex.invalidate()
+            report.retunes.append(
+                {"step": step, "cycle": cycle_idx, "measured_s": measured,
+                 "nominal_s": nominal, "schedule_changed": bool(changed),
+                 "reshuffled": reshuffled})
+
     step = start_step
+    cycle_idx = 0
     while step < n_steps:
         for ev in plan.events_at(step):
             # the span covers membership surgery + cache invalidation; the
@@ -199,6 +281,8 @@ def run_with_faults(strategy: Strategy, params0, data_fn: Callable,
                                 kind=ev.kind, step=step,
                                 replica=ev.replica, factor=ev.factor):
                 apply_event(ev, step)
+        if autotune_every > 0 and cycle_idx % autotune_every == 0:
+            autotune(step, cycle_idx)
         # cut the cycle at the next fault boundary: events must land
         # between compiled cycles, mirroring the plateau-window cut
         max_len = min(ex.max_cycle_len, n_steps - step)
@@ -222,10 +306,17 @@ def run_with_faults(strategy: Strategy, params0, data_fn: Callable,
             for mode, _ in cycle_plan.shape:
                 if split_ov(split_mode(mode)[0])[0] in _SYNC_MODES:
                     sim_time += exchange_cost_fn(n_active, dcn_scale)
+        # straggler wait the inner-group barrier wastes under the current
+        # grouping (the reshuffle's target metric — the makespan above is
+        # gated by the global worst either way)
+        report.wasted_wait_s += len(cycle_plan) * probe_mod.wasted_wait_s(
+            slowdowns, mask, inner_group,
+            getattr(strategy, "group_perm", None), t_compute_s)
         losses.extend(cycle_losses)
         metrics_log.extend(per_step_metrics)
         strategy.observe(cycle_losses)
         step += len(cycle_plan)
+        cycle_idx += 1
         if next_ckpt is not None and ckpt_cb is not None and step >= next_ckpt:
             with ex.tracer.span("checkpoint_save", cat="checkpoint",
                                 step=step):

@@ -33,7 +33,8 @@ from repro.core.schedule import DasoController, HierDasoController
 from repro.topo.spec import TopologySpec
 
 
-def derive_inner_periods(spec: TopologySpec, *, b_max: int = 4
+def derive_inner_periods(spec: TopologySpec, *, b_max: int = 4,
+                         bandwidths: Optional[Dict[str, float]] = None
                          ) -> Dict[str, int]:
     """Per-level sync periods B_l for the intermediate replica levels,
     innermost first. An explicit ``%period`` on the level wins; otherwise
@@ -44,10 +45,25 @@ def derive_inner_periods(spec: TopologySpec, *, b_max: int = 4
         B_l = clamp(round(b_max * bw_outer / bw_l), 1, b_max)
 
     which is the match-the-schedule-to-the-topology rule DS-Sync argues
-    for: bytes flow where the links can afford them."""
+    for: bytes flow where the links can afford them.
+
+    `bandwidths` overrides the spec's *annotations* with *measurements*
+    (level name -> bytes/s, outermost included), which is how the runtime
+    probe (`repro.topo.probe`) feeds what it observed on the live mesh
+    back into the same lowering rule — levels it did not measure keep
+    their annotated value:
+
+    >>> from repro.topo.spec import TopologySpec
+    >>> s = TopologySpec.parse("chip:4 x host:2@50e9 x pod:2@25e9")
+    >>> derive_inner_periods(s, b_max=4)
+    {'host': 2}
+    >>> derive_inner_periods(s, b_max=4, bandwidths={"host": 12.5e9})
+    {'host': 4}
+    """
     if b_max < 1:
         raise ValueError(f"b_max must be >= 1, got {b_max}")
-    bw_outer = spec.outer.bandwidth
+    bw = bandwidths or {}
+    bw_outer = bw.get(spec.outer.name, spec.outer.bandwidth)
     periods: Dict[str, int] = {}
     for lvl in spec.levels[1:-1]:
         if spec.group_size(lvl.name) == 1:
@@ -58,8 +74,9 @@ def derive_inner_periods(spec: TopologySpec, *, b_max: int = 4
         if lvl.period is not None:
             periods[lvl.name] = lvl.period
         else:
+            bw_l = bw.get(lvl.name, lvl.bandwidth)
             periods[lvl.name] = max(
-                1, min(b_max, round(b_max * bw_outer / lvl.bandwidth)))
+                1, min(b_max, round(b_max * bw_outer / bw_l)))
     return periods
 
 
@@ -89,7 +106,9 @@ def make_controller(spec: TopologySpec, cfg: DasoConfig, *,
         return DasoController(cfg, loss_window=loss_window)
     return HierDasoController(cfg, loss_window=loss_window,
                               inner_periods=derive_inner_periods(
-                                  spec, b_max=cfg.b_max))
+                                  spec, b_max=cfg.b_max),
+                              pinned_periods=tuple(
+                                  spec.inner_periods_explicit()))
 
 
 def build_topology_strategy(loss_fn: Callable, optimizer, spec: TopologySpec,

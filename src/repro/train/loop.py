@@ -84,6 +84,14 @@ class TrainLoopConfig:
     # logging and checkpoint writes. The same flag with one process is the
     # single-process SPMD oracle the N-process run is bit-exact with.
     distributed: bool = False
+    # self-tuning topology (repro/topo/probe, docs/tuning.md): time one
+    # real per-level sync on the live mesh at startup and retune the
+    # lowered schedule against the spec's annotations before training
+    # (controller.retune — measured == annotated is a strict no-op).
+    # `autotune_every` is the probe cadence in cycles for the supervised
+    # fault path (resilience/supervisor.py; the plain loop probes once).
+    autotune: bool = False
+    autotune_every: int = 8
 
 
 # strategies that take a topology spec purely for sizing — replica count,
@@ -204,6 +212,33 @@ def run_training(loss_fn: Callable, params0, data_fn: Callable,
     strategy = build_strategy(loss_fn, cfg, optimizer)
     if tracer is not None and strategy.controller is not None:
         strategy.controller.tracer = tracer
+
+    if cfg.autotune:
+        spec = resolve_topology(cfg)
+        if spec is None or strategy.controller is None:
+            if log is not None:
+                log("[train] autotune: no topology spec to probe; "
+                    "schedule left as configured")
+        elif cfg.distributed:
+            # per-process wall-clock probes could disagree and desync the
+            # schedule; the distributed probe channel is the supervised
+            # path's deterministic cost model (launch/train.py
+            # --fault-plan --autotune) or the passive tracer samples
+            if log is not None:
+                log("[train] autotune: startup wall-clock probe skipped "
+                    "under --distributed (see docs/tuning.md)")
+        else:
+            from repro.topo import probe as topo_probe
+            pr = topo_probe.active_probe(spec)
+            changed = strategy.controller.retune(
+                pr.costs, annotated=topo_probe.annotated_level_costs(
+                    spec, pr.param_bytes))
+            if log is not None:
+                periods = getattr(strategy.controller, "inner_periods", {})
+                log(f"[train] autotune probe: measured "
+                    f"{ {k: round(v * 1e6, 1) for k, v in pr.costs.items()} }"
+                    f" us/sync -> retuned={changed} b={strategy.controller.b}"
+                    f" inner_periods={periods}")
 
     placement = None
     if cfg.distributed:

@@ -124,6 +124,21 @@ POLICIES = {
         "model_step_ratio_gossip_vs_sync": ("bounds_strict", (None, 1.0)),
         "model_step_ratio_daso_vs_sync": ("bounds_strict", (None, 1.0)),
     },
+    "BENCH_tuning.json": {
+        # the self-tuning headline: a tuned run that DISCOVERS a DCN
+        # degradation by probing must finish strictly cheaper on the
+        # simulated clock than a static run that never learns of it
+        "tuned_vs_static_sim_time_ratio": ("bounds_strict", (None, 1.0)),
+        # ...and discover it within K <= 3 probe cycles of the event
+        "adapt_cycles": ("bounds", (None, 3)),
+        "retune_events": ("bounds_strict", (0, None)),
+        # autotune on a healthy cluster (measured == nominal) is a
+        # bit-exact no-op: the probe never perturbs numerics
+        "noop_retune_param_delta": ("exact", 0.0),
+        "noop_retune_loss_delta": ("exact", 0.0),
+        # skew-sorted groups waste strictly less inner-barrier wait
+        "reshuffle_wait_ratio": ("bounds_strict", (None, 1.0)),
+    },
     "BENCH_topology.json": {
         "two_level_param_delta": ("exact", 0.0),
         "two_level_loss_delta": ("exact", 0.0),

@@ -1,0 +1,155 @@
+#!/usr/bin/env python
+"""Docs/CLI drift gate (CI docs job): the docs tree must mention every
+user-facing name the code registers, and every command the docs show must
+parse against the real CLI.
+
+Three greps, no imports of the package (the gate must run on a docs-only
+checkout in seconds):
+
+  * every ``--flag`` that ``src/repro/launch/train.py`` adds must appear
+    somewhere in the docs tree (README.md, EXPERIMENTS.md, docs/*.md) —
+    a flag nobody documents is a flag nobody finds;
+  * every strategy the registry carries (``register_strategy("name")``)
+    and every benchmark tag ``benchmarks/run.py`` accepts (``want("tag")``)
+    must likewise be documented;
+  * every ``python -m repro.launch.train ...`` invocation inside a fenced
+    code block of README.md / EXPERIMENTS.md must use only flags the CLI
+    actually defines — the stale-command direction of the same contract
+    (docs showing ``--old-flag`` fail here the day the flag is renamed).
+
+  python tools/check_docs_sync.py [--repo-root DIR]
+
+Exit status 0 = docs and CLI agree; 1 = drift (each item printed).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+import sys
+
+_ADD_ARG_RE = re.compile(r"add_argument\(\s*\"(--[a-z][a-z0-9-]*)\"")
+_REGISTER_RE = re.compile(r"@?register_strategy\(\"(\w+)\"\)")
+_WANT_RE = re.compile(r"want\(\"(\w+)\"\)")
+_DOC_FLAG_RE = re.compile(r"(--[a-z][a-z0-9-]*)")
+
+
+def docs_files(root: str) -> list:
+    files = [os.path.join(root, "README.md"),
+             os.path.join(root, "EXPERIMENTS.md")]
+    files += sorted(glob.glob(os.path.join(root, "docs", "*.md")))
+    return [f for f in files if os.path.exists(f)]
+
+
+def read(path: str) -> str:
+    with open(path, encoding="utf-8") as f:
+        return f.read()
+
+
+def cli_flags(root: str) -> set:
+    src = read(os.path.join(root, "src", "repro", "launch", "train.py"))
+    return set(_ADD_ARG_RE.findall(src))
+
+
+def registered_strategies(root: str) -> set:
+    names = set()
+    for path in glob.glob(os.path.join(root, "src", "repro", "**", "*.py"),
+                          recursive=True):
+        names.update(_REGISTER_RE.findall(read(path)))
+    return names
+
+
+def bench_tags(root: str) -> set:
+    return set(_WANT_RE.findall(read(os.path.join(root, "benchmarks",
+                                                  "run.py"))))
+
+
+def documented_commands(path: str) -> list:
+    """(lineno, command) for every `... repro.launch.train ...` invocation
+    inside a fenced code block, with backslash continuations joined."""
+    out = []
+    in_fence = False
+    pending, pending_line = None, 0
+    for lineno, line in enumerate(read(path).splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            continue
+        if pending is not None:
+            pending += " " + line.strip().rstrip("\\")
+            if not line.rstrip().endswith("\\"):
+                out.append((pending_line, pending))
+                pending = None
+            continue
+        if "repro.launch.train" in line:
+            cmd = line.strip().rstrip("\\")
+            if line.rstrip().endswith("\\"):
+                pending, pending_line = cmd, lineno
+            else:
+                out.append((lineno, cmd))
+    if pending is not None:
+        out.append((pending_line, pending))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repo-root",
+                    default=os.path.join(os.path.dirname(__file__), ".."))
+    args = ap.parse_args(argv)
+    root = os.path.abspath(args.repo_root)
+
+    errors = []
+    docs = docs_files(root)
+    corpus = "\n".join(read(f) for f in docs)
+
+    flags = cli_flags(root)
+    if not flags:
+        errors.append("no CLI flags parsed from launch/train.py "
+                      "(regex drift? fix check_docs_sync, not the docs)")
+    for flag in sorted(flags):
+        if flag not in corpus:
+            errors.append(f"undocumented CLI flag: {flag} "
+                          "(launch/train.py defines it; no doc mentions it)")
+
+    strategies = registered_strategies(root)
+    if len(strategies) < 4:
+        errors.append(f"only {sorted(strategies)} strategies parsed from "
+                      "the registry (regex drift?)")
+    for name in sorted(strategies):
+        if not re.search(rf"\b{re.escape(name)}\b", corpus):
+            errors.append(f"undocumented strategy: {name!r} is registered "
+                          "but no doc mentions it")
+
+    tags = bench_tags(root)
+    for tag in sorted(tags):
+        if not re.search(rf"\b{re.escape(tag)}\b", corpus):
+            errors.append(f"undocumented benchmark tag: {tag!r} "
+                          "(benchmarks/run.py --only accepts it)")
+
+    # stale-command direction: flags used in documented train commands
+    # must exist in the CLI
+    for path in docs:
+        for lineno, cmd in documented_commands(path):
+            # only the segment after the module name is train's argv
+            # (tools/launch_procs.py wrappers put launcher flags before it)
+            argv_part = cmd.split("repro.launch.train", 1)[1]
+            for flag in _DOC_FLAG_RE.findall(argv_part):
+                if flag not in flags:
+                    errors.append(
+                        f"{os.path.relpath(path, root)}:{lineno}: stale "
+                        f"flag {flag} in documented command (not defined "
+                        "by launch/train.py)")
+
+    for e in errors:
+        print(e)
+    print(f"checked {len(flags)} flags, {len(strategies)} strategies, "
+          f"{len(tags)} bench tags against {len(docs)} docs: "
+          f"{'OK' if not errors else f'{len(errors)} drift item(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
